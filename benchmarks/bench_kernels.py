@@ -1,0 +1,59 @@
+"""Kernel-level microbenches: the pure-jnp oracle path (what the CPU
+actually executes — Pallas interpret mode adds Python overhead and is for
+validation, not speed) plus batched-LIMS query throughput built on it."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+from .common import emit
+
+
+def _time(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (256, 32), jnp.float32)
+    p = jax.random.normal(jax.random.PRNGKey(1), (65_536, 32), jnp.float32)
+
+    pd = jax.jit(lambda a, b: ref.pdist_ref(a, b, "sql2"))
+    dt = _time(pd, q, p)
+    emit("kernels/pdist_sql2_256x65k", dt * 1e6,
+         f"gflops={2*256*65536*32/dt/1e9:.1f}")
+
+    r = jnp.full((256,), 1.0)
+    rf = jax.jit(lambda a, b, rr: ref.range_filter_ref(a, b, rr)[0])
+    dt = _time(rf, q, p, r)
+    emit("kernels/range_filter_256x65k", dt * 1e6, "")
+
+    coef = jax.random.normal(key, (64, 9))
+    x = jax.random.uniform(key, (64, 4096))
+    lo = jnp.zeros(64)
+    hi = jnp.ones(64)
+    n = jnp.full(64, 1e5)
+    rk = jax.jit(lambda *a: ref.rankeval_ref(*a)[0])
+    dt = _time(rk, x, coef, lo, hi, n)
+    emit("kernels/rankeval_64x4096", dt * 1e6, "")
+
+    qa = jax.random.normal(key, (1, 8, 1024, 64), jnp.float32)
+    ka = jax.random.normal(key, (1, 2, 1024, 64), jnp.float32)
+    at = jax.jit(lambda a, b, c: ref.attention_ref(a, b, c, causal=True))
+    dt = _time(at, qa, ka, ka)
+    emit("kernels/attention_1x8x1024", dt * 1e6, "")
+
+
+if __name__ == "__main__":
+    main()

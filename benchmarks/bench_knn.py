@@ -1,0 +1,72 @@
+"""Fig. 9/10: kNN query vs dimensionality (GaussMix/Skewed) and vs k
+(forest-like / colorhist-like)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.baselines import BallTree, LinearScan, MLIndex, NLIMS
+from repro.core import LIMSIndex
+from repro.core.metrics import dist_one_to_many
+
+from .common import QUICK, emit, queries, run_knn, space
+
+
+def _indexes(sp, k=50):
+    return {
+        "lims": LIMSIndex(sp, n_clusters=k, m=3, n_rings=20),
+        "nlims": NLIMS(sp, n_clusters=k, m=3, n_rings=20),
+        "ml": MLIndex(sp, n_clusters=k),
+        "ball": BallTree(sp),
+        "scan": LinearScan(sp),
+    }
+
+
+def verify_exactness() -> int:
+    bad = 0
+    sp = space("gaussmix", n=20_000, d=8)
+    idxs = _indexes(sp, k=32)
+    for q in queries(sp, 5):
+        d = dist_one_to_many(q, sp.data, sp.metric)
+        kth = np.sort(d)[4]
+        for name, ix in idxs.items():
+            ids, ds, _ = ix.knn_query(q, 5)
+            if len(ds) != 5 or abs(np.sort(ds)[-1] - kth) > 1e-9:
+                bad += 1
+                emit(f"fig9/exactness_FAIL/{name}", 0, "")
+    return bad
+
+
+def fig9_knn_vs_dim() -> None:
+    dims = [2, 8] if QUICK else [2, 4, 8, 12, 16]
+    for ds in ("gaussmix", "skewed"):
+        for d in dims:
+            sp = space(ds, d=d)
+            idxs = _indexes(sp)
+            qs = queries(sp)
+            for name, ix in idxs.items():
+                m = run_knn(ix, qs, 5)
+                emit(f"fig9/{ds}_{d}d/{name}", m["ms"] * 1e3,
+                     f"pages={m['pages']:.0f}")
+
+
+def fig10_knn_vs_k() -> None:
+    ks = [1, 5, 25] if QUICK else [1, 5, 25, 50, 100]
+    for ds in ("forest", "colorhist"):
+        sp = space(ds)
+        idxs = _indexes(sp)
+        qs = queries(sp)
+        for k in ks:
+            for name, ix in idxs.items():
+                m = run_knn(ix, qs, k)
+                emit(f"fig10/{ds}_k{k}/{name}", m["ms"] * 1e3,
+                     f"pages={m['pages']:.0f}")
+
+
+def main() -> None:
+    assert verify_exactness() == 0
+    fig9_knn_vs_dim()
+    fig10_knn_vs_k()
+
+
+if __name__ == "__main__":
+    main()

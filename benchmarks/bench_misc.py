@@ -1,0 +1,129 @@
+"""Fig. 5 (parameter effects), Fig. 8/11 (generic metric space: Signature,
+edit distance), Fig. 12 (construction time & size), Fig. 13 (updates),
+Fig. 14 (LIMS vs N-LIMS learned-component ablation)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.baselines import BallTree, LinearScan, MLIndex, NLIMS, ZMIndex
+from repro.core import LIMSIndex, MetricSpace
+from repro.core.kselect import select_k
+from repro.core.metrics import dist_one_to_many
+
+from .common import (N_DEFAULT, QUICK, emit, queries,
+                     radius_for_selectivity, run_knn, run_range, space)
+
+
+def fig5_parameters() -> None:
+    sp = space("gaussmix", d=8)
+    qs = queries(sp)
+    rs = [radius_for_selectivity(sp, q, 1e-4) for q in qs]
+    # (a) K selection statistic
+    ks = [10, 25, 50, 100] if QUICK else [10, 25, 50, 75, 100, 150]
+    res = select_k(sp, ks, m=3)
+    for k, oh in zip(res.ks, res.overhead):
+        emit(f"fig5a/overhead_K{k}", oh * 1e6, f"best_k={res.best_k}")
+    # (b) actual query cost vs K
+    for k in ks:
+        ix = LIMSIndex(sp, n_clusters=k, m=3, n_rings=20)
+        m = run_range(ix, qs, rs)
+        emit(f"fig5b/K{k}", m["ms"] * 1e3, f"pages={m['pages']:.0f}")
+    # (c) #pivots m
+    for mp in (2, 3, 4, 5):
+        ix = LIMSIndex(sp, n_clusters=50, m=mp, n_rings=20)
+        m = run_range(ix, qs, rs)
+        emit(f"fig5c/m{mp}", m["ms"] * 1e3, f"pages={m['pages']:.0f}")
+    # (d) #rings N
+    for nr in (5, 10, 20, 40):
+        ix = LIMSIndex(sp, n_clusters=50, m=3, n_rings=nr)
+        m = run_range(ix, qs, rs)
+        emit(f"fig5d/N{nr}", m["ms"] * 1e3, f"pages={m['pages']:.0f}")
+
+
+def fig8_11_signature() -> None:
+    sp = space("signature", n=4_000 if QUICK else 10_000)
+    lims = LIMSIndex(sp, n_clusters=25, m=3, n_rings=20)
+    ball = BallTree(sp)
+    qs = queries(sp, 5 if QUICK else 8)
+    for sel in (1e-3, 1e-2):
+        rs = [radius_for_selectivity(sp, q, sel) for q in qs]
+        for name, ix in (("lims", lims), ("mtree", ball)):
+            m = run_range(ix, qs, rs)
+            emit(f"fig8/sig_sel{sel:g}/{name}", m["ms"] * 1e3,
+                 f"pages={m['pages']:.0f};dist={m['dist']:.0f}")
+    for k in (1, 5, 25):
+        for name, ix in (("lims", lims), ("mtree", ball)):
+            m = run_knn(ix, qs, k)
+            emit(f"fig11/sig_k{k}/{name}", m["ms"] * 1e3,
+                 f"pages={m['pages']:.0f}")
+
+
+def fig12_construction() -> None:
+    sp = space("gaussmix", d=8)
+    builders = {
+        "lims": lambda: LIMSIndex(sp, n_clusters=50, m=3, n_rings=20),
+        "nlims": lambda: NLIMS(sp, n_clusters=50, m=3, n_rings=20),
+        "ml": lambda: MLIndex(sp, n_clusters=50),
+        "zm": lambda: ZMIndex(sp),
+        "ball": lambda: BallTree(sp),
+    }
+    for name, fn in builders.items():
+        t0 = time.perf_counter()
+        ix = fn()
+        dt = time.perf_counter() - t0
+        emit(f"fig12/build/{name}", dt * 1e6,
+             f"index_mb={ix.index_nbytes()/2**20:.2f}")
+    # per-cluster retrain cost (the update story, §5.3)
+    ix = LIMSIndex(sp, n_clusters=50, m=3, n_rings=20)
+    t0 = time.perf_counter()
+    ix.retrain_cluster(0)
+    emit("fig12/retrain_one_cluster", (time.perf_counter() - t0) * 1e6, "")
+
+
+def fig13_updates() -> None:
+    sp = space("gaussmix", d=8)
+    ix = LIMSIndex(sp, n_clusters=50, m=3, n_rings=20)
+    qs = queries(sp)
+    rs = [radius_for_selectivity(sp, q, 1e-4) for q in qs]
+    rng = np.random.default_rng(7)
+    m = run_range(ix, qs, rs)
+    emit("fig13/ins0", m["ms"] * 1e3, f"pages={m['pages']:.0f}")
+    total = 0
+    for frac in (0.01, 0.02, 0.04):
+        n_new = int(sp.n * frac) - total
+        total += n_new
+        base = sp.data[rng.choice(sp.n, n_new)]
+        for row in base + rng.normal(0, 0.01, base.shape):
+            ix.insert(row)
+        m = run_range(ix, qs, rs)
+        emit(f"fig13/ins{int(frac*100)}pct", m["ms"] * 1e3,
+             f"pages={m['pages']:.0f}")
+
+
+def fig14_ablation() -> None:
+    ns = [20_000, 60_000] if QUICK else [25_000, 50_000, 100_000, 200_000]
+    for n in ns:
+        sp = space("gaussmix", n=n, d=8)
+        qs = queries(sp)
+        rs = [radius_for_selectivity(sp, q, 1e-4) for q in qs]
+        for name, ix in (("lims", LIMSIndex(sp, n_clusters=50, m=3,
+                                            n_rings=20)),
+                         ("nlims", NLIMS(sp, n_clusters=50, m=3,
+                                         n_rings=20))):
+            m = run_range(ix, qs, rs)
+            emit(f"fig14/n{n//1000}k/{name}", m["ms"] * 1e3,
+                 f"pages={m['pages']:.0f};probes={m['probes']:.0f}")
+
+
+def main() -> None:
+    fig5_parameters()
+    fig8_11_signature()
+    fig12_construction()
+    fig13_updates()
+    fig14_ablation()
+
+
+if __name__ == "__main__":
+    main()

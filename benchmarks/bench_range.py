@@ -1,0 +1,83 @@
+"""Fig. 6/7: range query vs dimensionality (GaussMix L2, Skewed L1) and
+vs selectivity (forest-like / colorhist-like), LIMS against every
+applicable baseline."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.baselines import BallTree, LinearScan, MLIndex, NLIMS, ZMIndex
+from repro.core import LIMSIndex
+from repro.core.metrics import dist_one_to_many
+
+from .common import N_DEFAULT, QUICK, emit, queries, radius_for_selectivity, space
+
+
+def _indexes(sp, k=50, with_tree=True):
+    out = {
+        "lims": LIMSIndex(sp, n_clusters=k, m=3, n_rings=20),
+        "nlims": NLIMS(sp, n_clusters=k, m=3, n_rings=20),
+        "ml": MLIndex(sp, n_clusters=k),
+        "scan": LinearScan(sp),
+    }
+    if sp.is_vector and sp.data.shape[1] <= 8:
+        out["zm"] = ZMIndex(sp)
+    if with_tree:
+        out["ball"] = BallTree(sp)
+    return out
+
+
+def fig6_range_vs_dim() -> None:
+    dims = [2, 4, 8, 12] if QUICK else [2, 4, 8, 12, 16]
+    for ds, sel in (("gaussmix", 1e-4), ("skewed", 1e-4)):
+        for d in dims:
+            sp = space(ds, d=d)
+            idxs = _indexes(sp)
+            qs = queries(sp)
+            rs = [radius_for_selectivity(sp, q, sel) for q in qs]
+            for name, ix in idxs.items():
+                from .common import run_range
+                m = run_range(ix, qs, rs)
+                emit(f"fig6/{ds}_{d}d/{name}", m["ms"] * 1e3,
+                     f"pages={m['pages']:.0f};dist={m['dist']:.0f}")
+
+
+def fig7_range_vs_selectivity() -> None:
+    sels = [1e-4, 1e-3, 1e-2] if QUICK else [1e-4, 1e-3, 1e-2, 4e-2]
+    for ds in ("forest", "colorhist"):
+        sp = space(ds)
+        idxs = _indexes(sp, with_tree=False)
+        qs = queries(sp)
+        for sel in sels:
+            rs = [radius_for_selectivity(sp, q, sel) for q in qs]
+            for name, ix in idxs.items():
+                from .common import run_range
+                m = run_range(ix, qs, rs)
+                emit(f"fig7/{ds}_sel{sel:g}/{name}", m["ms"] * 1e3,
+                     f"pages={m['pages']:.0f}")
+
+
+def verify_exactness() -> int:
+    """Every index must return exactly the brute-force set (5 queries)."""
+    bad = 0
+    sp = space("gaussmix", n=20_000, d=8)
+    idxs = _indexes(sp, k=32)
+    for q in queries(sp, 5):
+        d = dist_one_to_many(q, sp.data, sp.metric)
+        r = float(np.quantile(d, 1e-3))
+        truth = set(np.where(d <= r)[0].tolist())
+        for name, ix in idxs.items():
+            ids, _, _ = ix.range_query(q, r)
+            if set(int(i) for i in ids) != truth:
+                bad += 1
+                emit(f"fig6/exactness_FAIL/{name}", 0, "")
+    return bad
+
+
+def main() -> None:
+    assert verify_exactness() == 0
+    fig6_range_vs_dim()
+    fig7_range_vs_selectivity()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Shared benchmark helpers: datasets, query workloads, measurement."""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import LIMSIndex, MetricSpace
+from repro.core.metrics import dist_one_to_many
+from repro.data.datasets import dataset_by_name
+
+QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
+N_DEFAULT = 20_000 if QUICK else 60_000
+N_QUERIES = 8 if QUICK else 15
+
+_cache: dict = {}
+
+
+def space(name: str, n: int = None, d: int = 8, seed: int = 0) -> MetricSpace:
+    n = n or N_DEFAULT
+    key = (name, n, d, seed)
+    if key not in _cache:
+        data, metric = dataset_by_name(name, n, d, seed)
+        _cache[key] = MetricSpace(data, metric)
+    return _cache[key]
+
+
+def queries(sp: MetricSpace, n_q: int = None, seed: int = 1):
+    """Query objects: dataset points + small perturbation (vector) or raw
+    dataset points (generic metrics), as the paper samples queries."""
+    n_q = n_q or N_QUERIES
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(sp.n, n_q, replace=False)
+    if sp.is_vector:
+        return sp.data[idx] + rng.normal(0, 0.003, (n_q, sp.data.shape[1]))
+    return sp.data[idx]
+
+
+def radius_for_selectivity(sp: MetricSpace, q, sel: float) -> float:
+    d = dist_one_to_many(q, sp.data, sp.metric)
+    return float(np.quantile(d, sel))
+
+
+def run_range(index, qs, rs):
+    """Aggregate (avg_pages, avg_time_ms, avg_probes, avg_dist) + exactness
+    oracle count."""
+    pages = t = probes = dist = 0.0
+    n_res = 0
+    for q, r in zip(qs, rs):
+        ids, ds, st = index.range_query(q, r)
+        pages += st.pages
+        t += st.time_s
+        probes += st.probes
+        dist += st.dist_comps
+        n_res += len(ids)
+    n = len(qs)
+    return {"pages": pages / n, "ms": t / n * 1e3, "probes": probes / n,
+            "dist": dist / n, "results": n_res / n}
+
+
+def run_knn(index, qs, k: int):
+    pages = t = 0.0
+    for q in qs:
+        ids, ds, st = index.knn_query(q, k)
+        pages += st.pages
+        t += st.time_s
+    n = len(qs)
+    return {"pages": pages / n, "ms": t / n * 1e3}
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,36 @@
+"""Benchmark driver: one section per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV; BENCH_QUICK=1 shrinks scales."""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import bench_kernels, bench_knn, bench_misc, bench_range
+    sections = [
+        ("kernels", bench_kernels.main),
+        ("range (Fig 6/7)", bench_range.main),
+        ("knn (Fig 9/10)", bench_knn.main),
+        ("params/signature/build/updates/ablation (Fig 5/8/11-14)",
+         bench_misc.main),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in sections:
+        t0 = time.time()
+        print(f"# --- {name}", file=sys.stderr)
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+        print(f"# --- {name} done in {time.time()-t0:.0f}s",
+              file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmark sections failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Retrieval serving: the paper's index as the framework's retrieval layer.
+
+An LM encodes queries into its embedding space; LIMS answers *exact* kNN
+over a corpus of embeddings — batched distances go through the same math
+as the Pallas `pdist` kernel (Gram trick). This is the deployment story in
+DESIGN.md §2: the index serves the models the framework trains.
+
+    PYTHONPATH=src python examples/retrieval_serving.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import LIMSIndex, MetricSpace
+from repro.core.metrics import dist_one_to_many
+from repro.models import zoo
+from repro.models.params import init_params
+from repro.models.transformer import forward_seq
+
+
+def main() -> None:
+    # 1) a small encoder LM produces the embedding space
+    cfg = ModelConfig(
+        name="encoder-20m", family="dense", n_layers=4, d_model=256,
+        n_heads=4, n_kv_heads=4, d_ff=1024, vocab=8192, head_dim=64,
+        attn_impl="dense", remat="none", dtype="float32")
+    params = init_params(zoo.model_specs(cfg), jax.random.PRNGKey(0),
+                         cfg.dtype)
+
+    @jax.jit
+    def encode(tokens):
+        x, _, _ = forward_seq(params, tokens, cfg)
+        # mean-pool, then matryoshka-style truncation to 32 dims: metric
+        # indexes live in moderate intrinsic dimension (the paper evaluates
+        # ≤65d); retrieval is exact in the indexed embedding space
+        return x.mean(axis=1)[:, :32]
+
+    rng = np.random.default_rng(0)
+    # a realistic corpus clusters by topic: 100 anchor docs, 50 noisy
+    # variants each (edit a few tokens) — similar docs ⇒ nearby embeddings
+    anchors = rng.integers(0, cfg.vocab, (100, 32))
+    corpus_tokens = np.repeat(anchors, 50, axis=0)
+    for i in range(5_000):
+        corpus_tokens[i, rng.integers(0, 32)] = rng.integers(0, cfg.vocab)
+    corpus = np.asarray(encode(jnp.asarray(corpus_tokens)))
+    print(f"corpus: {corpus.shape[0]:,} docs embedded to d={corpus.shape[1]}")
+
+    # 2) LIMS indexes the embedding corpus (exact metric index)
+    sp = MetricSpace(corpus.astype(np.float64), "l2")
+    # K should track the corpus's natural cluster count (the paper's
+    # OR+λMAE elbow finds this automatically; here the corpus has 100
+    # topics, so clusters must be at least that fine to be tight)
+    ix = LIMSIndex(sp, n_clusters=100, m=3, n_rings=20)
+    print(f"LIMS built in {ix.build_time_s:.2f}s "
+          f"({ix.index_nbytes()/2**20:.2f} MiB index)")
+
+    # 3) serve batched queries: encode -> exact kNN (queries are noisy
+    # variants of corpus docs, the retrieval workload)
+    q_tokens = np.repeat(anchors[:16], 1, axis=0)
+    for i in range(16):
+        q_tokens[i, rng.integers(0, 32)] = rng.integers(0, cfg.vocab)
+    # calibrate the kNN radius step Δr to the neighbor-distance scale
+    # (Alg. 2 takes Δr as input; too-large steps overshoot the kth ball)
+    probe = sp.data[rng.choice(sp.n, 64)]
+    nn_scale = np.median([np.partition(
+        dist_one_to_many(p, sp.data, "l2"), 6)[6] for p in probe])
+    t0 = time.perf_counter()
+    q_emb = np.asarray(encode(jnp.asarray(q_tokens)))
+    pages = 0
+    for i, q in enumerate(q_emb.astype(np.float64)):
+        ids, ds, st = ix.knn_query(q, 5, delta_r=float(nn_scale) / 2)
+        pages += st.pages
+        truth = np.argsort(dist_one_to_many(q, sp.data, "l2"))[:5]
+        assert abs(np.sort(ds)[-1] -
+                   dist_one_to_many(q, sp.data, "l2")[truth[-1]]) < 1e-9, \
+            "retrieval must be exact"
+    dt = time.perf_counter() - t0
+    total_pages = -(-sp.n // ix.clusters[0].store.omega)
+    print(f"16 queries: {dt*1e3:.1f} ms end-to-end, "
+          f"avg pages/query={pages/16:.1f} "
+          f"(corpus is {total_pages} pages — "
+          f"{total_pages/(pages/16):.0f}x less I/O than a scan)")
+    print("all 16 kNN results verified exact. OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""Checkpointing: atomic, mesh-elastic, async-capable.
+
+Layout: <dir>/step_<n>/  with one .npy per tensor (flattened pytree path)
+plus manifest.json (step, tree structure, dtypes). Writes go to a tmp dir
+renamed into place — a killed writer never corrupts the latest checkpoint.
+
+Restore is *resharding*: tensors are loaded on host and device_put against
+the CURRENT mesh's NamedShardings, so a run checkpointed on mesh (4, 2)
+restarts cleanly on (2, 4) or (8, 1) — the elastic-scaling contract.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_key_str(k) for k in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return f"#{k.idx}"
+    return str(k)
+
+
+def save(state, directory: str, step: int, keep: int = 3) -> str:
+    """Atomic synchronous save. Returns the checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat, _ = _flatten(state)
+    manifest = {"step": int(step), "keys": sorted(flat),
+                "time": time.time()}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        if str(arr.dtype) == "bfloat16":
+            # .npy can't round-trip ml_dtypes; widen losslessly to f32
+            arr = arr.astype(np.float32)
+        np.save(os.path.join(tmp, key.replace("/", "__") + ".npy"), arr)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int) -> None:
+    ckpts = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in ckpts[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")
+             and os.path.exists(os.path.join(directory, d, "manifest.json"))]
+    return max(steps) if steps else None
+
+
+def restore(template, directory: str, step: Optional[int] = None):
+    """Load into the structure (and shardings) of ``template``.
+
+    ``template`` may hold arrays OR ShapeDtypeStructs with shardings —
+    each tensor is device_put against the template's sharding, which is
+    what makes restore mesh-elastic.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    flat_t, treedef = _flatten(template)
+    out = {}
+    for key, leaf in flat_t.items():
+        fn = os.path.join(path, key.replace("/", "__") + ".npy")
+        arr = np.load(fn)
+        import ml_dtypes  # noqa: F401  (registers bfloat16 casts)
+        arr = arr.astype(leaf.dtype)
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is not None:
+            out[key] = jax.device_put(arr, sharding)
+        else:
+            out[key] = jax.device_put(arr)
+    leaves = [out[k] for k, _ in
+              sorted(flat_t.items(), key=lambda kv: kv[0])]
+    # rebuild in original order
+    ordered = [out["/".join(_key_str(k) for k in p)]
+               for p, _ in jax.tree_util.tree_flatten_with_path(template)[0]]
+    return jax.tree_util.tree_unflatten(treedef, ordered), step
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget saves on a worker thread; at most one in flight."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_saved: Optional[int] = None
+
+    def maybe_save(self, state, step: int) -> bool:
+        if self._thread is not None and self._thread.is_alive():
+            return False                   # previous save still running
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                  state)
+
+        def work():
+            save(host_state, self.directory, step, self.keep)
+            self.last_saved = step
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+        return True
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()

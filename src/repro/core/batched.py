@@ -1,0 +1,133 @@
+"""Batched (TPU-native) LIMS query engine.
+
+The paper's IntervalGen exists to produce *contiguous disk ranges*; the
+union of its LIMS-value intervals is exactly the set of objects whose ring
+vector lies inside the per-pivot rid box (DESIGN.md §3). On an accelerator
+we skip the interval walk entirely: compute the rid box per (query,
+cluster, pivot) with the same rank math as the host index, AND the
+per-object ring IDs against the box (one vectorized mask), and refine with
+the fused-distance kernel math. Exactness is inherited: the mask is the
+same candidate set, refinement applies true distances.
+
+Data layout: per-cluster arrays padded to a common n_max —
+  rows (K, n_max, d) · rids (K, n_max, m) · d_sorted (K, m, n_max)
+  pivots (K, m, d) · dist_min/max (K, m) · width (K,)
+Padding uses +inf distances / -1 ids so padded slots never match.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .index import LIMSIndex
+
+
+class BatchedLIMS:
+    """Immutable device snapshot of a LIMSIndex (vector metrics, L2)."""
+
+    def __init__(self, index: LIMSIndex):
+        assert index.space.metric == "l2", "batched path: L2 (MXU kernel)"
+        self.m = index.m
+        self.n_rings = index.n_rings
+        K = index.K
+        n_max = max(ci.n for ci in index.clusters)
+        d = index.space.data.shape[1]
+        rows = np.zeros((K, n_max, d), np.float32)
+        rids = np.full((K, n_max, self.m), -1, np.int32)
+        dsort = np.full((K, self.m, n_max), np.inf, np.float32)
+        pivots = np.zeros((K, self.m, d), np.float32)
+        dmin = np.zeros((K, self.m), np.float32)
+        dmax = np.zeros((K, self.m), np.float32)
+        width = np.ones((K,), np.int32)
+        gids = np.full((K, n_max), -1, np.int64)
+        for ci in index.clusters:
+            n = ci.n
+            if n == 0:
+                continue
+            k = ci.cid
+            rows[k, :n] = ci.store.rows
+            rids[k, :n] = ci.mapping.rids[ci.mapping.order]
+            dsort[k, :, :n] = ci.mapping.d_sorted
+            pivots[k] = ci.pivot_rows
+            dmin[k] = ci.mapping.dist_min
+            dmax[k] = ci.mapping.dist_max
+            width[k] = max(1, -(-n // self.n_rings))
+            gids[k, :n] = ci.store_ids
+        self.rows = jnp.asarray(rows)
+        self.rids = jnp.asarray(rids)
+        self.dsort = jnp.asarray(dsort)
+        self.pivots = jnp.asarray(pivots)
+        self.dmin = jnp.asarray(dmin)
+        self.dmax = jnp.asarray(dmax)
+        self.width = jnp.asarray(width)
+        self.gids_np = gids
+        self._ns = jnp.asarray(
+            np.array([ci.n for ci in index.clusters], np.int32))
+        # source-of-truth payloads for the exact (f64) final refinement
+        self.data_np = np.asarray(index.space.data, np.float64)
+
+    def _mask(self, q: jax.Array, r: jax.Array):
+        """Candidate mask (K, n_max) for one query — fully vectorized."""
+        K, mm, n_max = self.dsort.shape
+        # f32 guard band: rank math ran in f64 at build time; inflate the
+        # annulus so rounding can never exclude a true result (the final
+        # f64 refinement removes the extras)
+        r = r * (1 + 1e-5) + 1e-4
+        dq = jnp.sqrt(jnp.maximum(jnp.sum(
+            (self.pivots - q[None, None, :]) ** 2, -1), 0.0))   # (K, m)
+        alive = jnp.all(dq <= self.dmax + r, -1) & \
+            jnp.all(dq >= self.dmin - r, -1) & (self._ns > 0)   # (K,)
+        r_lo = jnp.maximum(dq - r, self.dmin)
+        r_hi = jnp.minimum(dq + r, self.dmax)
+        # identical rank math to the host: rank = searchsorted-left;
+        # hi rank = searchsorted-right - 1
+        vs = jax.vmap(jax.vmap(
+            lambda col, lo, hi: (jnp.searchsorted(col, lo, side="left"),
+                                 jnp.searchsorted(col, hi, side="right") - 1)))
+        rank_lo, rank_hi = vs(self.dsort, r_lo, r_hi)           # (K, m)
+        w = self.width[:, None]
+        rid_lo = jnp.clip(rank_lo // w, 0, self.n_rings - 1)
+        rid_hi = jnp.clip(rank_hi // w, 0, self.n_rings - 1)
+        nonempty = rank_hi >= rank_lo                           # (K, m)
+        box = jnp.all(
+            (self.rids >= rid_lo[:, None, :]) &
+            (self.rids <= rid_hi[:, None, :]), -1)              # (K, n_max)
+        ok = alive & jnp.all(nonempty, -1)
+        return box & ok[:, None] & (self.rids[:, :, 0] >= 0)
+
+    def range_query(self, q, r: float):
+        """Exact L2 range query; returns (global ids, distances)."""
+        qf = jnp.asarray(q, jnp.float32)
+        mask = self._mask(qf, jnp.float32(r))
+        d2 = jnp.sum((self.rows - qf[None, None, :]) ** 2, -1)
+        # f32 guard band keeps borderline candidates; exact f64 refine below
+        hit = np.asarray(mask & (d2 <= (jnp.float32(r) + 1e-3) ** 2))
+        ids = self.gids_np[hit]
+        from .metrics import dist_one_to_many
+        d_true = dist_one_to_many(np.asarray(q, np.float64),
+                                  self.data_np[ids], "l2")
+        keep = d_true <= r
+        return ids[keep], d_true[keep]
+
+    def knn_query(self, q, k: int):
+        """Exact kNN: growing radius over the mask + device top-k."""
+        q = jnp.asarray(q, jnp.float32)
+        d2 = jnp.sum((self.rows - q[None, None, :]) ** 2, -1)
+        valid = self.rids[:, :, 0] >= 0
+        # initial radius from the k-th distance in the query's cluster
+        r = float(jnp.sqrt(jnp.maximum(jnp.min(
+            jnp.where(valid, d2, jnp.inf)), 0.0))) + 1e-6
+        while True:
+            r *= 2.0
+            mask = self._mask(q, jnp.float32(r)) & (d2 <= r * r)
+            cnt = int(jnp.sum(mask))
+            if cnt >= k or r > 1e9:
+                d_masked = jnp.where(mask, d2, jnp.inf)
+                flat = d_masked.reshape(-1)
+                vals, idx = jax.lax.top_k(-flat, k)
+                dists = np.sqrt(np.maximum(-np.asarray(vals), 0.0))
+                if dists[-1] <= r:          # kth inside queried ball: done
+                    gid = self.gids_np.reshape(-1)[np.asarray(idx)]
+                    return gid, dists

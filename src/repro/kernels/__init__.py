@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), validated in
+interpret mode against the pure-jnp oracle in ref.py; ops.py holds the
+jitted public wrappers (padding + platform dispatch).
+"""
+from . import ops, ref
+from .ops import flash_attention, pdist, range_filter, rankeval
+
+__all__ = ["ops", "ref", "pdist", "rankeval", "range_filter",
+           "flash_attention"]

@@ -1,0 +1,110 @@
+"""Blocked online-softmax (flash) attention Pallas kernel, GQA-aware.
+
+The LM-side hot spot of the framework (training forward + prefill). Grid
+is (batch, q_heads, q_blocks, kv_blocks) with the kv dimension innermost:
+output / running-max / running-denominator blocks are revisited across the
+kv sweep, so the accumulation state lives in VMEM without scratch buffers
+(portable to ``interpret=True``). Causal tiles strictly above the diagonal
+are skipped with ``pl.when`` — the classic ~2× FLOP saving.
+
+GQA: q head h reads kv head h // (Hq // Hk) straight from the BlockSpec
+index map — no KV replication in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+                  bq: int, bk: int, scale: float, causal: bool,
+                  kv_len: int | None = None):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+    nj = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full(m_ref.shape, _NEG, m_ref.dtype)
+        l_ref[...] = jnp.zeros(l_ref.shape, l_ref.dtype)
+        o_ref[...] = jnp.zeros(o_ref.shape, o_ref.dtype)
+
+    # causal: skip tiles entirely above the diagonal
+    live = (j * bk <= i * bq + bq - 1) if causal else (j >= 0)
+
+    @pl.when(live)
+    def _acc():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal or kv_len is not None:
+            qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            ok = (qpos >= kpos) if causal else (qpos >= 0)
+            if kv_len is not None:
+                ok = ok & (kpos < kv_len)
+            s = jnp.where(ok, s, _NEG)
+        m_prev = m_ref[0, 0]                               # (bq,)
+        l_prev = l_ref[0, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[0, 0] = alpha * l_prev + jnp.sum(p, axis=-1)
+        m_ref[0, 0] = m_new
+        o_ref[0, 0] = o_ref[0, 0] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == nj - 1)
+    def _norm():
+        o_ref[0, 0] = o_ref[0, 0] / jnp.maximum(l_ref[0, 0], 1e-30)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "interpret", "kv_len"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           causal: bool = True, bq: int = 128, bk: int = 128,
+                           interpret: bool = True,
+                           kv_len: int | None = None) -> jax.Array:
+    """q: (B, Hq, Sq, D); k, v: (B, Hk, Sk, D); Hq % Hk == 0.
+
+    Sq % bq == 0 and Sk % bk == 0 (ops.py pads); ``kv_len`` masks padded
+    keys beyond the true kv length. Returns (B, Hq, Sq, D) in q's dtype.
+    """
+    b, hq, sq, d = q.shape
+    _, hk, sk, _ = k.shape
+    assert hq % hk == 0 and sq % bq == 0 and sk % bk == 0
+    group = hq // hk
+    scale = 1.0 / (d ** 0.5)
+    kern = functools.partial(_flash_kernel, bq=bq, bk=bk, scale=scale,
+                             causal=causal, kv_len=kv_len)
+    o, _, _ = pl.pallas_call(
+        kern,
+        grid=(b, hq, sq // bq, sk // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, h, i, j: (bi, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, h, i, j, g=group: (bi, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, h, i, j, g=group: (bi, h // g, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, h, i, j: (bi, h, i, 0)),
+            pl.BlockSpec((1, 1, bq), lambda bi, h, i, j: (bi, h, i)),
+            pl.BlockSpec((1, 1, bq), lambda bi, h, i, j: (bi, h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, sq, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return o.astype(q.dtype)

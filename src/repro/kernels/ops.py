@@ -1,0 +1,95 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Handle padding to block multiples, platform dispatch (compiled on TPU,
+``interpret=True`` elsewhere) and result un-padding. These are the entry
+points the rest of the framework calls; nothing else touches pallas_call.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .flash_attention import flash_attention_pallas
+from .pdist import pdist_pallas
+from .range_filter import range_filter_pallas
+from .rankeval import rankeval_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x: jax.Array, mult: int, fill: float = 0.0) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    return jnp.concatenate(
+        [x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)], axis=0)
+
+
+def pdist(q, p, metric: str = "sql2", bq: int = 128, bp: int = 128):
+    """Pairwise distances with automatic padding. metric: sql2 | l1 | linf.
+    sql2 returns squared distances (use ``jnp.sqrt`` or square radii)."""
+    q = jnp.asarray(q)
+    p = jnp.asarray(p)
+    nq, npts = q.shape[0], p.shape[0]
+    qp = _pad_rows(q, bq)
+    pp = _pad_rows(p, bp)
+    out = pdist_pallas(qp, pp, metric=metric, bq=bq, bp=bp,
+                       interpret=_interpret())
+    return out[:nq, :npts]
+
+
+def rankeval(x, coef, lo, hi, n, n_rings: int = 20):
+    """Batched rank-model eval (G groups × B values) + ring ids."""
+    x = jnp.asarray(x, jnp.float32)
+    coef = jnp.asarray(coef, jnp.float32)
+    g, b = x.shape
+    bg, bb = 8, 128
+    gp, bp_ = (-g) % bg, (-b) % bb
+    xq = jnp.pad(x, ((0, gp), (0, bp_)))
+    coefq = jnp.pad(coef, ((0, gp), (0, 0)))
+    loq = jnp.pad(jnp.asarray(lo, jnp.float32), (0, gp))
+    hiq = jnp.pad(jnp.asarray(hi, jnp.float32), (0, gp), constant_values=1.0)
+    nq_ = jnp.pad(jnp.asarray(n, jnp.float32), (0, gp))
+    rank, rid = rankeval_pallas(xq, coefq, loq, hiq, nq_, n_rings=n_rings,
+                                bg=bg, bb=bb, interpret=_interpret())
+    return rank[:g, :b], rid[:g, :b]
+
+
+def range_filter(q, p, r, bq: int = 128, bp: int = 128):
+    """Fused L2-ball membership mask for batched range queries."""
+    q = jnp.asarray(q)
+    p = jnp.asarray(p)
+    r = jnp.asarray(r, jnp.float32)
+    nq, npts = q.shape[0], p.shape[0]
+    qp = _pad_rows(q, bq)
+    pp = _pad_rows(p, bp, fill=np.inf)     # padding rows never match
+    rp = _pad_rows(r, bq, fill=-1.0)
+    mask, cnt = range_filter_pallas(qp, pp, rp, bq=bq, bp=bp,
+                                    interpret=_interpret())
+    return mask[:nq, :npts], cnt[:nq]
+
+
+def flash_attention(q, k, v, causal: bool = True, bq: int = 128,
+                    bk: int = 128):
+    """Padded flash attention: (B,Hq,Sq,D) × (B,Hk,Sk,D) → (B,Hq,Sq,D)."""
+    b, hq, sq, d = q.shape
+    _, hk, sk, _ = k.shape
+    pq, pk = (-sq) % bq, (-sk) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    out = flash_attention_pallas(q, k, v, causal=causal, bq=bq, bk=bk,
+                                 interpret=_interpret(),
+                                 kv_len=sk if pk else None)
+    return out[:, :, :sq]
+
+
+__all__ = ["pdist", "rankeval", "range_filter", "flash_attention"]

@@ -1,0 +1,77 @@
+"""Fused rank-model inference kernel: Clenshaw polynomial eval + ring ID.
+
+The TPU analogue of LIMS's per-query model calls: for G (cluster, pivot)
+groups at once, evaluate each group's degree-g Chebyshev rank model on a
+(G, B) tile of distances and fuse the ring-ID transform
+rid = clip(rank // ceil(n/N), 0, N-1) — one VMEM pass, VPU only.
+
+Layout: x (G, B) distances; coef (G, C) low→high Chebyshev coefficients
+(zero-padded to a common C); lo/hi/n (G,) per-group normalization; a
+single pass produces both clipped ranks and ring IDs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rankeval_kernel(x_ref, coef_ref, lo_ref, hi_ref, n_ref, o_rank_ref,
+                     o_rid_ref, *, n_coef: int, n_rings: int):
+    x = x_ref[...].astype(jnp.float32)                  # (g, b)
+    lo = lo_ref[...].astype(jnp.float32)[:, None]       # (g, 1)
+    hi = hi_ref[...].astype(jnp.float32)[:, None]
+    n = n_ref[...].astype(jnp.float32)[:, None]
+    t = (x - lo) / jnp.maximum(hi - lo, 1e-30) * 2.0 - 1.0
+    t = jnp.clip(t, -1.0, 1.0)
+    # Clenshaw recurrence, coefficients high -> low (static unroll over C)
+    b1 = jnp.zeros_like(t)
+    b2 = jnp.zeros_like(t)
+    t2 = 2.0 * t
+    for k in range(n_coef - 1, 0, -1):
+        c_k = coef_ref[:, k].astype(jnp.float32)[:, None]
+        b1, b2 = c_k + t2 * b1 - b2, b1
+    c0 = coef_ref[:, 0].astype(jnp.float32)[:, None]
+    r = c0 + t * b1 - b2
+    rank = jnp.clip(jnp.rint(r), 0.0, jnp.maximum(n - 1.0, 0.0))
+    width = jnp.ceil(n / float(n_rings))
+    rid = jnp.clip(jnp.floor(rank / jnp.maximum(width, 1.0)), 0.0,
+                   float(n_rings - 1))
+    o_rank_ref[...] = rank.astype(jnp.int32)
+    o_rid_ref[...] = rid.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_rings", "bg", "bb", "interpret"))
+def rankeval_pallas(x: jax.Array, coef: jax.Array, lo: jax.Array,
+                    hi: jax.Array, n: jax.Array, n_rings: int = 20,
+                    bg: int = 8, bb: int = 128,
+                    interpret: bool = True):
+    """Returns (rank, rid), both (G, B) int32."""
+    g, b = x.shape
+    g2, n_coef = coef.shape
+    assert g == g2 and g % bg == 0 and b % bb == 0, (x.shape, coef.shape, bg, bb)
+    kern = functools.partial(_rankeval_kernel, n_coef=n_coef,
+                             n_rings=n_rings)
+    return pl.pallas_call(
+        kern,
+        grid=(g // bg, b // bb),
+        in_specs=[
+            pl.BlockSpec((bg, bb), lambda i, j: (i, j)),
+            pl.BlockSpec((bg, n_coef), lambda i, j: (i, 0)),
+            pl.BlockSpec((bg,), lambda i, j: (i,)),
+            pl.BlockSpec((bg,), lambda i, j: (i,)),
+            pl.BlockSpec((bg,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bg, bb), lambda i, j: (i, j)),
+            pl.BlockSpec((bg, bb), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, b), jnp.int32),
+            jax.ShapeDtypeStruct((g, b), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, coef, lo, hi, n)

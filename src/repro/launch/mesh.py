@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module must never
+touch jax device state (tests see 1 CPU device; only dryrun.py sets the
+512-host-device XLA flag before its first jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod mesh: 16×16 = 256 chips per pod; 2 pods = 512 chips.
+
+    Axes: ("data", "model") single-pod; ("pod", "data", "model") across
+    pods — the "pod" axis carries only data parallelism (+ gradient
+    all-reduce over DCN), never tensor parallelism.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Whatever devices exist locally (smoke tests / CPU examples)."""
+    devs = jax.devices()
+    mp = model_parallel
+    while mp > 1 and len(devs) % mp:
+        mp //= 2
+    data = len(devs) // mp
+    return jax.make_mesh(
+        (data, mp), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,249 @@
+"""Encoder-decoder backbone (seamless-m4t style): bidirectional encoder
+over stubbed modality-frontend frame embeddings + causal decoder with
+cross-attention. The speech/text frontend is explicitly a stub per the
+assignment — ``input_specs`` provides precomputed (B, S_src, D) frames.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import (apply_rope, attention_specs, chunked_attention,
+                     decode_attention, dense_attention, mlp_specs, rmsnorm,
+                     rope_tables, swiglu)
+from .params import ParamSpec
+from .transformer import _remat, _stack
+
+
+def enc_block_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "attn_norm": ParamSpec((d,), ("embed_noshard",), init="ones",
+                               dtype="float32"),
+        "attn": attention_specs(d, cfg.n_heads, cfg.n_kv_heads, cfg.hd),
+        "mlp_norm": ParamSpec((d,), ("embed_noshard",), init="ones",
+                              dtype="float32"),
+        "mlp": mlp_specs(d, cfg.d_ff),
+    }
+
+
+def dec_block_specs(cfg: ModelConfig) -> dict:
+    sp = enc_block_specs(cfg)
+    d = cfg.d_model
+    sp["cross_norm"] = ParamSpec((d,), ("embed_noshard",), init="ones",
+                                 dtype="float32")
+    sp["cross"] = attention_specs(d, cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+    return sp
+
+
+def encdec_specs(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab
+    n_dec = cfg.n_dec_layers or cfg.n_layers
+    return {
+        "embed": ParamSpec((v, d), ("vocab", "embed"), init="normal"),
+        "enc_final_norm": ParamSpec((d,), ("embed_noshard",), init="ones",
+                                    dtype="float32"),
+        "final_norm": ParamSpec((d,), ("embed_noshard",), init="ones",
+                                dtype="float32"),
+        "lm_head": ParamSpec((d, v), ("embed", "vocab")),
+        "enc_layers": _stack(enc_block_specs(cfg), cfg.n_layers),
+        "dec_layers": _stack(dec_block_specs(cfg), n_dec),
+    }
+
+
+def _attend(p, xq, xkv, cfg, cos_q, sin_q, cos_k, sin_k, causal,
+            rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"])
+    rot = int(cfg.hd * cfg.partial_rotary)
+    if rope:
+        q = apply_rope(q, cos_q, sin_q, rot)
+        k = apply_rope(k, cos_k, sin_k, rot)
+    sq, t = xq.shape[1], xkv.shape[1]
+    if cfg.attn_impl == "dense" or max(sq, t) <= cfg.attn_chunk:
+        o = dense_attention(q, k, v, causal=causal)
+    else:
+        ck = min(cfg.attn_chunk, sq, t)
+        sq_pad = (-sq) % ck
+        t_pad = (-t) % ck
+        assert sq_pad == 0 and t_pad == 0, (sq, t, ck)
+        o = chunked_attention(q, k, v, causal=causal, chunk_q=ck,
+                              chunk_k=ck)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), (k, v)
+
+
+def encode(params, src_embeds: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """src_embeds: (B, S_src, D) stub frontend output → encoder memory."""
+    x = src_embeds.astype(jnp.dtype(cfg.dtype))
+    s = x.shape[1]
+    rot = int(cfg.hd * cfg.partial_rotary)
+    cos, sin = rope_tables(jnp.arange(s), rot, cfg.rope_theta)
+
+    def body(carry, lp):
+        h = carry
+        xn = rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+        a, _ = _attend(lp["attn"], xn, xn, cfg, cos, sin, cos, sin,
+                       causal=False)
+        h = h + a
+        f = swiglu(lp["mlp"], rmsnorm(h, lp["mlp_norm"], cfg.norm_eps))
+        return (h + f).astype(h.dtype), None
+
+    body = _remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rmsnorm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def decode_train(params, memory: jax.Array, tokens: jax.Array,
+                 cfg: ModelConfig) -> jax.Array:
+    """Teacher-forced decoder over full target sequence → logits."""
+    x = params["embed"][tokens]
+    s = x.shape[1]
+    sm = memory.shape[1]
+    rot = int(cfg.hd * cfg.partial_rotary)
+    cos, sin = rope_tables(jnp.arange(s), rot, cfg.rope_theta)
+    cos_m, sin_m = rope_tables(jnp.arange(sm), rot, cfg.rope_theta)
+
+    def body(carry, lp):
+        h = carry
+        xn = rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+        a, _ = _attend(lp["attn"], xn, xn, cfg, cos, sin, cos, sin,
+                       causal=True)
+        h = h + a
+        xn = rmsnorm(h, lp["cross_norm"], cfg.norm_eps)
+        c, _ = _attend(lp["cross"], xn, memory, cfg, cos, sin, cos_m,
+                       sin_m, causal=False, rope=False)
+        h = h + c
+        f = swiglu(lp["mlp"], rmsnorm(h, lp["mlp_norm"], cfg.norm_eps))
+        return (h + f).astype(h.dtype), None
+
+    body = _remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    xn = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return jnp.einsum("bsd,dv->bsv", xn, params["lm_head"],
+                      preferred_element_type=jnp.float32)
+
+
+def encdec_loss(params, batch: dict, cfg: ModelConfig):
+    memory = encode(params, batch["src_embeds"], cfg)
+    logits = decode_train(params, memory, batch["tokens"], cfg) \
+        .astype(jnp.float32)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return nll, {"nll": nll}
+
+
+# ------------------------------------------------------------------ serving
+def encdec_cache_spec(cfg: ModelConfig, batch: int, cache_len: int,
+                      mem_len: int):
+    n_dec = cfg.n_dec_layers or cfg.n_layers
+    kv = (n_dec, batch, cache_len, cfg.n_kv_heads, cfg.hd)
+    mem_kv = (n_dec, batch, mem_len, cfg.n_kv_heads, cfg.hd)
+    axes = ("layers", "batch", "kv_seq", "kv_heads", "qkv")
+    return {
+        "k": (kv, axes, cfg.dtype),
+        "v": (kv, axes, cfg.dtype),
+        "mem_k": (mem_kv, axes, cfg.dtype),
+        "mem_v": (mem_kv, axes, cfg.dtype),
+        "pos": ((), (), "int32"),
+    }
+
+
+def encdec_prefill(params, src_embeds, tokens, cfg: ModelConfig,
+                   cache_len: int):
+    """Encode source, prime decoder with `tokens`, build caches."""
+    b = tokens.shape[0]
+    memory = encode(params, src_embeds, cfg)
+    spec = encdec_cache_spec(cfg, b, cache_len, memory.shape[1])
+    cache = {k: jnp.zeros(s, jnp.dtype(dt)) for k, (s, a, dt) in spec.items()}
+    # precompute cross-attention KV once per request
+    def mk_mem(lp):
+        k = jnp.einsum("bsd,dhk->bshk", memory, lp["cross"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", memory, lp["cross"]["wv"])
+        return k, v
+    mem_k, mem_v = jax.vmap(mk_mem)(
+        jax.tree.map(lambda t: t, params["dec_layers"]))
+    cache["mem_k"], cache["mem_v"] = mem_k, mem_v
+
+    # teacher-forced pass over the prime tokens to fill self-attn cache
+    x = params["embed"][tokens]
+    s = x.shape[1]
+    rot = int(cfg.hd * cfg.partial_rotary)
+    cos, sin = rope_tables(jnp.arange(s), rot, cfg.rope_theta)
+
+    def body(carry, lp):
+        h = carry
+        xn = rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+        a, kv = _attend(lp["attn"], xn, xn, cfg, cos, sin, cos, sin,
+                        causal=True)
+        h = h + a
+        xn = rmsnorm(h, lp["cross_norm"], cfg.norm_eps)
+        c, _ = _attend(lp["cross"], xn, memory, cfg, cos, sin, None, None,
+                       causal=False, rope=False)
+        h = h + c
+        f = swiglu(lp["mlp"], rmsnorm(h, lp["mlp_norm"], cfg.norm_eps))
+        return (h + f).astype(h.dtype), kv
+
+    x, (k_new, v_new) = jax.lax.scan(body, x, params["dec_layers"])
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new, 0, axis=2)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new, 0, axis=2)
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    xn = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", xn, params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    return logits, cache
+
+
+def encdec_decode_step(params, token, cache, cfg: ModelConfig):
+    pos = cache["pos"]
+    x = params["embed"][token][:, None, :]
+    rot = int(cfg.hd * cfg.partial_rotary)
+    cos, sin = rope_tables(pos[None], rot, cfg.rope_theta)
+    n_dec = cfg.n_dec_layers or cfg.n_layers
+
+    def body(carry, inp):
+        h, kall, vall = carry
+        lp, mk, mv, li = inp
+        xn = rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", xn, lp["attn"]["wq"])
+        kn = jnp.einsum("bsd,dhk->bshk", xn, lp["attn"]["wk"])
+        vn = jnp.einsum("bsd,dhk->bshk", xn, lp["attn"]["wv"])
+        q = apply_rope(q, cos, sin, rot)
+        kn = apply_rope(kn, cos, sin, rot)
+        zero = jnp.zeros((), jnp.int32)
+        kall = jax.lax.dynamic_update_slice(
+            kall, kn[None].astype(kall.dtype), (li, zero, pos, zero, zero))
+        vall = jax.lax.dynamic_update_slice(
+            vall, vn[None].astype(vall.dtype), (li, zero, pos, zero, zero))
+        kc = jax.lax.dynamic_index_in_dim(kall, li, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vall, li, 0, keepdims=False)
+        o = decode_attention(q, kc, vc, pos)
+        h = h + jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+        # cross attention against the precomputed memory KV (all valid)
+        xn = rmsnorm(h, lp["cross_norm"], cfg.norm_eps)
+        qc = jnp.einsum("bsd,dhk->bshk", xn, lp["cross"]["wq"])
+        oc = decode_attention(qc, mk, mv, jnp.asarray(mk.shape[1] - 1,
+                                                      jnp.int32))
+        h = h + jnp.einsum("bshk,hkd->bsd", oc, lp["cross"]["wo"])
+        f = swiglu(lp["mlp"], rmsnorm(h, lp["mlp_norm"], cfg.norm_eps))
+        return ((h + f).astype(h.dtype), kall, vall), None
+
+    li = jnp.arange(n_dec, dtype=jnp.int32)
+    (x, ks, vs), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"]),
+        (params["dec_layers"], cache["mem_k"], cache["mem_v"], li))
+    cache = dict(cache, k=ks, v=vs)
+    cache["pos"] = pos + 1
+    xn = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", xn, params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    return logits, cache

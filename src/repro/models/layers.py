@@ -1,0 +1,232 @@
+"""Shared transformer building blocks: RMSNorm, RoPE (partial-rotary),
+GQA attention (dense / chunked-flash / decode, sliding-window aware),
+SwiGLU MLP. Pure functions over param subtrees; fp32 softmax/norm math,
+bf16 matmuls.
+
+On TPU the chunked path is replaced by ``repro.kernels.flash_attention``
+(same math, explicit VMEM tiling); the jnp implementations here are what
+the CPU dry-run lowers, and the kernels are validated against the same
+oracle (tests/test_kernels.py, tests/test_models_attn.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .params import ParamSpec
+
+_NEG = -1e30
+
+
+# ----------------------------------------------------------------- norms
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def gated_rmsnorm(x: jax.Array, z: jax.Array, w: jax.Array,
+                  eps: float = 1e-5) -> jax.Array:
+    """Mamba2 output norm: rmsnorm(x * silu(z)) * w."""
+    xf = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ RoPE
+def rope_tables(positions: jax.Array, rot_dim: int,
+                theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions (...,) → cos/sin tables (..., rot_dim/2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32)
+                           / rot_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array,
+               rot_dim: int) -> jax.Array:
+    """x: (..., hd); rotate the first rot_dim dims (partial rotary)."""
+    rot, rest = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = rot[..., 0::2], rot[..., 1::2]
+    # cos/sin: (..., S, rot/2) → insert the head axis so trailing dims
+    # align against x's (..., S, H, rot/2)
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(rot.shape)
+    return jnp.concatenate([out, rest], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention
+def attention_specs(d_model: int, n_heads: int, n_kv: int, hd: int) -> dict:
+    return {
+        "wq": ParamSpec((d_model, n_heads, hd), ("embed", "heads", "qkv")),
+        "wk": ParamSpec((d_model, n_kv, hd), ("embed", "kv_heads", "qkv")),
+        "wv": ParamSpec((d_model, n_kv, hd), ("embed", "kv_heads", "qkv")),
+        "wo": ParamSpec((n_heads, hd, d_model), ("heads", "qkv", "embed")),
+    }
+
+
+def _grouped_scores(q, k):
+    """q: (B, Hk, G, Sq, hd), k: (B, Hk, T, hd) → (B, Hk, G, Sq, T)."""
+    return jnp.einsum("bkgqh,bkth->bkgqt", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _grouped_out(w, v):
+    return jnp.einsum("bkgqt,bkth->bkgqh", w.astype(v.dtype), v)
+
+
+def _causal_mask(sq: int, t: int, q0, window: Optional[int]):
+    """(sq, t) boolean mask; q0 = absolute position of q row 0."""
+    qpos = q0 + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    ok = qpos >= kpos
+    if window is not None:
+        ok &= (qpos - kpos) < window
+    return ok
+
+
+def dense_attention(q, k, v, q0=0, causal=True,
+                    window: Optional[int] = None) -> jax.Array:
+    """q: (B, Sq, Hq, hd); k/v: (B, T, Hk, hd). Full-score fp32 softmax —
+    the smoke-test / oracle path."""
+    b, sq, hq, hd = q.shape
+    t, hk = k.shape[1], k.shape[2]
+    g = hq // hk
+    qg = q.transpose(0, 2, 1, 3).reshape(b, hk, g, sq, hd)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    s = _grouped_scores(qg * (hd ** -0.5), kt)
+    if causal:
+        m = _causal_mask(sq, t, q0, window)
+        s = jnp.where(m[None, None, None], s, _NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    o = _grouped_out(w, vt)
+    return o.reshape(b, hq, sq, hd).transpose(0, 2, 1, 3)
+
+
+def chunked_attention(q, k, v, q0=0, causal=True,
+                      window: Optional[int] = None,
+                      chunk_q: int = 2048, chunk_k: int = 2048) -> jax.Array:
+    """Two-level flash attention in pure jnp: scan over q chunks, inner scan
+    over kv chunks with online softmax. O(chunk_q × chunk_k) live scores —
+    this is what lets 32k×32k prefill lower without an S×S buffer.
+
+    Causal waste note: fully-masked kv chunks are still *computed* (masked
+    to -inf) because scan trip counts are static; the roofline MODEL_FLOPS
+    ratio surfaces this ~2× attention-FLOP overhead, and the kernels'
+    `pl.when` skip removes it on real TPU.
+    """
+    b, sq, hq, hd = q.shape
+    t, hk = k.shape[1], k.shape[2]
+    g = hq // hk
+    sq_real, t_real = sq, t
+    pad_q, pad_k = (-sq) % chunk_q, (-t) % chunk_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        sq += pad_q
+    if pad_k:
+        # padded keys sit at positions ≥ t_real: the causal mask hides them
+        # from real queries automatically; the kv_limit mask below covers
+        # the non-causal case.
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        t += pad_k
+    kv_limit = t_real if (pad_k and not causal) else None
+    nq, nk = sq // chunk_q, t // chunk_k
+    qg = (q.transpose(0, 2, 1, 3).reshape(b, hk, g, sq, hd) *
+          (hd ** -0.5))
+    kt = k.transpose(0, 2, 1, 3).reshape(b, hk, nk, chunk_k, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(b, hk, nk, chunk_k, hd)
+    qs = qg.reshape(b, hk, g, nq, chunk_q, hd).transpose(3, 0, 1, 2, 4, 5)
+
+    def q_step(_, qi_pack):
+        qc, iq = qi_pack                       # (b,hk,g,cq,hd), scalar
+
+        def kv_step(carry, kj_pack):
+            m_p, l_p, acc = carry
+            kc, vc, jk = kj_pack
+            s = jnp.einsum("bkgqh,bkth->bkgqt", qc, kc,
+                           preferred_element_type=jnp.float32)
+            if causal or kv_limit is not None:
+                qpos = q0 + iq * chunk_q + jnp.arange(chunk_q)[:, None]
+                kpos = jk * chunk_k + jnp.arange(chunk_k)[None, :]
+                ok = (qpos >= kpos) if causal else (qpos >= -1)
+                if window is not None:
+                    ok &= (qpos - kpos) < window
+                if kv_limit is not None:
+                    ok &= kpos < kv_limit
+                s = jnp.where(ok[None, None, None], s, _NEG)
+            m_n = jnp.maximum(m_p, jnp.max(s, -1))
+            p = jnp.exp(s - m_n[..., None])
+            alpha = jnp.exp(m_p - m_n)
+            l_n = alpha * l_p + jnp.sum(p, -1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqt,bkth->bkgqh", p.astype(vc.dtype), vc)
+            return (m_n, l_n, acc), None
+
+        m0 = jnp.full((b, hk, g, chunk_q), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, hk, g, chunk_q), jnp.float32)
+        a0 = jnp.zeros((b, hk, g, chunk_q, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kt.transpose(2, 0, 1, 3, 4), vt.transpose(2, 0, 1, 3, 4),
+             jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qs, jnp.arange(nq)))
+    # outs: (nq, b, hk, g, cq, hd) → (b, sq, hq, hd)
+    o = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hk, g, sq, hd)
+    o = o.reshape(b, hq, sq, hd).transpose(0, 2, 1, 3)
+    return o[:, :sq_real]
+
+
+def decode_attention(q, k_cache, v_cache, pos,
+                     window: Optional[int] = None) -> jax.Array:
+    """Single-step attention against a (possibly ring-buffered) cache.
+
+    q: (B, 1, Hq, hd); caches: (B, T, Hk, hd); pos: scalar int32 — the
+    absolute position of the new token. Entries with index > pos (or
+    outside the sliding window) are masked.
+    """
+    b, _, hq, hd = q.shape
+    t, hk = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hk
+    qg = q.reshape(b, hk, g, hd) * (hd ** -0.5)
+    # einsum directly against the (B, T, Hk, hd) cache layout — an explicit
+    # transpose here would materialize a full cache copy every step
+    s = jnp.einsum("bkgh,btkh->bkgt", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    idx = jnp.arange(t)
+    if window is None:
+        ok = idx <= pos
+    else:
+        # ring buffer (cache size t == min(window, seq)): slot i holds the
+        # largest absolute position p ≤ pos with p % t == i; p ≥ 0 ⇒ valid
+        # (p is automatically within the window because t ≤ window).
+        wrapped = pos - ((pos - idx) % t)
+        ok = wrapped >= 0
+    s = jnp.where(ok[None, None, None], s, _NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkh->bkgh", w.astype(v_cache.dtype), v_cache)
+    return o.reshape(b, 1, hq, hd)
+
+
+# -------------------------------------------------------------------- MLP
+def mlp_specs(d_model: int, d_ff: int) -> dict:
+    return {
+        "w1": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "w3": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "w2": ParamSpec((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def swiglu(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    return h @ p["w2"]

@@ -1,0 +1,209 @@
+"""Mamba2 / SSD (state-space duality) blocks — chunked, MXU-friendly.
+
+The SSD algorithm (Dao & Gu 2024) splits the sequence into chunks: the
+intra-chunk term is a masked (decay-weighted) attention-like matmul, the
+inter-chunk term is a short ``lax.scan`` over chunk states — both map onto
+the MXU, which is the whole point of SSD on TPU. Decode is the O(1)
+recurrent update on a (B, H, P, N) state cache.
+
+Shapes: d_inner = expand·d_model; H = d_inner / head_dim heads; state N.
+in_proj emits [z, x, B, C, dt]; depthwise causal conv over (x, B, C).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import gated_rmsnorm
+from .params import ParamSpec
+
+
+def mamba_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return d_in, n_heads, conv_dim
+
+
+def mamba_specs(cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, n_heads, conv_dim = mamba_dims(cfg)
+    proj_out = 2 * d_in + 2 * s.n_groups * s.d_state + n_heads
+    return {
+        "in_proj": ParamSpec((d, proj_out), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((s.d_conv, conv_dim), ("conv", "ssm_inner")),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), init="zeros"),
+        "A_log": ParamSpec((n_heads,), ("ssm_inner",), init="zeros",
+                           dtype="float32"),
+        "dt_bias": ParamSpec((n_heads,), ("ssm_inner",), init="zeros",
+                             dtype="float32"),
+        "D": ParamSpec((n_heads,), ("ssm_inner",), init="ones",
+                       dtype="float32"),
+        "norm_w": ParamSpec((d_in,), ("ssm_inner",), init="ones",
+                            dtype="float32"),
+        "out_proj": ParamSpec((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    s = cfg.ssm
+    d_in, n_heads, _ = mamba_dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xc, bb, cc, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + gn, 2 * d_in + 2 * gn], axis=-1)
+    return z, xc, bb, cc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv along S. xbc: (B, S, C); w: (K, C).
+    Returns (out, new_state) with state = last K-1 inputs."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)              # (B, S+K-1, C)
+    out = sum(xp[:, i:i + xbc.shape[1], :] *
+              w[i][None, None, :] for i in range(k))
+    out = out + b[None, None, :].astype(out.dtype)
+    new_state = xp[:, -(k - 1):, :]
+    return jax.nn.silu(out).astype(xbc.dtype), new_state
+
+
+def ssd_chunked(x, dt, a_neg, bmat, cmat, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H) (post-softplus); a_neg: (H,) negative;
+    bmat/cmat: (B, S, G, N) with G groups broadcast over H.
+    Returns y (B, S, H, P), final_state (B, H, P, N).
+    """
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    pad = (-s) % chunk
+    if pad:
+        # zero-dt padding steps are identities: decay=exp(0)=1, input
+        # contribution dt·x = 0 — state passes through untouched.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+    rep = h // g
+
+    def to_chunks(t):
+        return t.reshape((b, nc, chunk) + t.shape[2:])
+
+    xc = to_chunks(x)
+    dtc = to_chunks(dt)
+    bc = to_chunks(bmat)
+    cc = to_chunks(cmat)
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def chunk_step(state, inp):
+        xk, dtk, bk, ck = inp            # (b,L,h,p) (b,L,h) (b,L,g,n) ...
+        a = dtk * a_neg[None, None, :]                     # (b,L,h) ≤ 0
+        cums = jnp.cumsum(a, axis=1)                       # (b,L,h)
+        seg = cums[:, :, None, :] - cums[:, None, :, :]    # (b,i,j,h)
+        li = jnp.tril(jnp.ones((chunk, chunk), bool))
+        lmat = jnp.where(li[None, :, :, None], jnp.exp(seg), 0.0)
+        bh = jnp.repeat(bk, rep, axis=2)                   # (b,L,h,n)
+        ch = jnp.repeat(ck, rep, axis=2)
+        gmat = jnp.einsum("bihn,bjhn->bijh", ch.astype(jnp.float32),
+                          bh.astype(jnp.float32))
+        xt = xk.astype(jnp.float32) * dtk[..., None]       # (b,L,h,p)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", gmat * lmat, xt)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bihn,bhpn->bihp",
+                             ch.astype(jnp.float32) * jnp.exp(cums)[..., None],
+                             state)
+        # state update
+        decay_end = jnp.exp(cums[:, -1:, :] - cums)        # (b,L,h)
+        s_new = state * jnp.exp(cums[:, -1, :])[:, :, None, None] + \
+            jnp.einsum("bjhn,bjhp->bhpn", bh.astype(jnp.float32) *
+                       decay_end[..., None], xt)
+        return s_new, (y_intra + y_inter)
+
+    xcs = xc.transpose(1, 0, 2, 3, 4)
+    dts = dtc.transpose(1, 0, 2, 3)
+    bcs = bc.transpose(1, 0, 2, 3, 4)
+    ccs = cc.transpose(1, 0, 2, 3, 4)
+    final, ys = jax.lax.scan(chunk_step, init_state, (xcs, dts, bcs, ccs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    if pad:
+        y = y[:, :s - pad]
+    return y.astype(x.dtype), final
+
+
+def mamba_forward(p: dict, x: jax.Array, cfg: ModelConfig,
+                  cache: dict | None = None):
+    """Full-sequence forward. Returns (y, new_cache_state or None)."""
+    s = cfg.ssm
+    d_in, n_heads, conv_dim = mamba_dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z, xc, bb, ccm, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xc, bb, ccm], axis=-1)
+    conv_state = None if cache is None else cache["conv"]
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xc, bb, ccm = jnp.split(xbc, [d_in, d_in + s.n_groups * s.d_state],
+                            axis=-1)
+    b_, sl, _ = xc.shape
+    xh = xc.reshape(b_, sl, n_heads, s.head_dim)
+    bmat = bb.reshape(b_, sl, s.n_groups, s.d_state)
+    cmat = ccm.reshape(b_, sl, s.n_groups, s.d_state)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) +
+                          p["dt_bias"][None, None, :])
+    a_neg = -jnp.exp(p["A_log"].astype(jnp.float32))
+    init = None if cache is None else cache["ssm"]
+    y, final = ssd_chunked(xh, dtv, a_neg, bmat, cmat, s.chunk, init)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b_, sl, d_in).astype(x.dtype)
+    y = gated_rmsnorm(y, z, p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "ssm": final}
+    return out, new_cache
+
+
+def mamba_decode(p: dict, x: jax.Array, cfg: ModelConfig, cache: dict):
+    """Single-token recurrent step. x: (B, 1, D)."""
+    s = cfg.ssm
+    d_in, n_heads, conv_dim = mamba_dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z, xc, bb, ccm, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xc, bb, ccm], axis=-1)[:, 0]    # (B, C)
+    conv_state = cache["conv"]                             # (B, K-1, C)
+    window = jnp.concatenate([conv_state.astype(xbc.dtype),
+                              xbc[:, None, :]], axis=1)    # (B, K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:, :]
+    xc2, bb2, cc2 = jnp.split(
+        conv_out, [d_in, d_in + s.n_groups * s.d_state], axis=-1)
+    b_ = x.shape[0]
+    xh = xc2.reshape(b_, n_heads, s.head_dim).astype(jnp.float32)
+    bmat = bb2.reshape(b_, s.n_groups, s.d_state).astype(jnp.float32)
+    cmat = cc2.reshape(b_, s.n_groups, s.d_state).astype(jnp.float32)
+    rep = n_heads // s.n_groups
+    bh = jnp.repeat(bmat, rep, axis=1)                     # (B, H, N)
+    ch = jnp.repeat(cmat, rep, axis=1)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a_neg = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dtv * a_neg)[..., None, None]          # (B, H, 1, 1)
+    state = cache["ssm"]                                   # (B, H, P, N)
+    xt = xh * dtv[..., None]                               # (B, H, P)
+    state = state * decay + xt[..., None] * bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", state, ch)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(b_, 1, d_in).astype(x.dtype)
+    y = gated_rmsnorm(y, z, p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], {"conv": new_conv.astype(cache["conv"].dtype),
+                               "ssm": state}

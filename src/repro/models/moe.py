@@ -1,0 +1,136 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch (EP-friendly).
+
+No (B,S,E,C) one-hot dispatch tensors — for kimi-k2 (384 experts) those
+would be terabytes. Instead: flatten tokens, argsort assignments by expert,
+compute each assignment's position within its expert segment, drop beyond
+capacity, gather into (E, C, D) buffers, run the grouped SwiGLU batched
+matmul (experts sharded over "model" ⇒ all-to-all-style collectives), and
+scatter-add the combine. Router math in fp32 with load-balance + z losses.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, MoEConfig
+from .params import ParamSpec
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    sp = {
+        "router": ParamSpec((d, m.n_experts), ("embed_noshard", "experts"),
+                            dtype="float32"),
+        "we1": ParamSpec((m.n_experts, d, m.d_expert),
+                         ("experts", "embed", "expert_mlp")),
+        "we3": ParamSpec((m.n_experts, d, m.d_expert),
+                         ("experts", "embed", "expert_mlp")),
+        "we2": ParamSpec((m.n_experts, m.d_expert, d),
+                         ("experts", "expert_mlp", "embed")),
+    }
+    if m.n_shared_experts:
+        f = m.d_expert * m.n_shared_experts
+        sp.update({
+            "ws1": ParamSpec((d, f), ("embed", "mlp")),
+            "ws3": ParamSpec((d, f), ("embed", "mlp")),
+            "ws2": ParamSpec((f, d), ("mlp", "embed")),
+        })
+    return sp
+
+
+def _dispatch_one_group(xf, logits, m: MoEConfig, cap: int):
+    """Route one token group: (T_g, D) → gathered (E, cap, D) buffers.
+    All ops are local to the group (vmapped over the leading group dim)."""
+    t, d = xf.shape
+    gate_vals, expert_idx = jax.lax.top_k(logits, m.top_k)        # (T, k)
+    gates = jax.nn.softmax(gate_vals, axis=-1)
+    a = t * m.top_k
+    flat_e = expert_idx.reshape(a)
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), m.top_k)
+    flat_g = gates.reshape(a)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st_, sg = flat_e[order], flat_t[order], flat_g[order]
+    seg_start = jnp.searchsorted(se, jnp.arange(m.n_experts,
+                                                dtype=se.dtype))
+    pos = jnp.arange(a, dtype=jnp.int32) - seg_start[se].astype(jnp.int32)
+    keep = pos < cap
+    slot = jnp.where(keep, se.astype(jnp.int32) * cap + pos, a)
+    tok_of_slot = jnp.full((m.n_experts * cap + 1,), -1, jnp.int32) \
+        .at[slot].set(jnp.where(keep, st_, -1))[:-1]
+    gate_of_slot = jnp.zeros((m.n_experts * cap + 1,), jnp.float32) \
+        .at[slot].set(jnp.where(keep, sg, 0.0))[:-1]
+    occupied = tok_of_slot >= 0
+    xin = jnp.where(occupied[:, None], xf[jnp.maximum(tok_of_slot, 0)], 0.0)
+    return (xin.reshape(m.n_experts, cap, d), tok_of_slot, gate_of_slot,
+            occupied)
+
+
+def _combine_one_group(eo, tok_of_slot, gate_of_slot, occupied, t: int,
+                       d: int):
+    contrib = eo.reshape(-1, d).astype(jnp.float32) * gate_of_slot[:, None]
+    return jnp.zeros((t + 1, d), jnp.float32).at[
+        jnp.where(occupied, tok_of_slot, t)].add(contrib)[:-1]
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig):
+    """x: (B, S, D) → (y, aux) with aux = {load_balance, router_z}.
+
+    Dispatch is *locality-grouped*: tokens are split into
+    ``cfg.moe_dispatch_groups`` groups (≥ the data-parallel degree) and
+    routed group-locally; only the (G, E, cap, D) expert buffers cross the
+    mesh (an all-to-all-shaped reshard from G-sharded to E-sharded). With
+    a single global dispatch XLA instead all-gathers the full (T, D)
+    activations to every model shard — measured 16× more collective bytes
+    on mixtral train_4k (EXPERIMENTS.md §Perf).
+    """
+    m: MoEConfig = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    logits = (xf.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                       # (T, E)
+
+    # ---- aux losses (fp32, global) -----------------------------------
+    gate_vals_all, expert_idx_all = jax.lax.top_k(logits, m.top_k)
+    me = jnp.mean(probs, axis=0)
+    one_hot_top = jax.nn.one_hot(expert_idx_all[:, 0], m.n_experts,
+                                 dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top, axis=0)
+    load_balance = m.n_experts * jnp.sum(me * ce)
+    router_z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # ---- grouped dispatch --------------------------------------------
+    groups = max(1, getattr(cfg, "moe_dispatch_groups", 1) or 1)
+    while t % groups:
+        groups //= 2
+    tg = t // groups
+    a_g = tg * m.top_k
+    cap = int(max(min(tg, 16),
+                  round(a_g / m.n_experts * m.capacity_factor)))
+    from ..sharding.logical import maybe_constrain
+    dp = ("pod", "data")
+    xg = maybe_constrain(xf.reshape(groups, tg, d), (dp, None, None))
+    lg = maybe_constrain(logits.reshape(groups, tg, m.n_experts),
+                         (dp, None, None))
+    xin, tok_of_slot, gate_of_slot, occupied = jax.vmap(
+        lambda xx, ll: _dispatch_one_group(xx, ll, m, cap))(xg, lg)
+    # xin: (G, E, cap, D) — resharding G(data)→E(model) here is the
+    # all-to-all; the grouped matmul below then needs no weight movement.
+    xin = maybe_constrain(xin, (dp, "model", None, None))
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xin, p["we1"])) * \
+        jnp.einsum("gecd,edf->gecf", xin, p["we3"])
+    eo = jnp.einsum("gecf,efd->gecd", h, p["we2"])
+    eo = maybe_constrain(eo, (dp, "model", None, None))
+    yg = jax.vmap(lambda e, ts, gs, oc:
+                  _combine_one_group(e, ts, gs, oc, tg, d))(
+        eo, tok_of_slot, gate_of_slot, occupied)
+    yf = maybe_constrain(yg, (dp, None, None)).reshape(t, d)
+
+    if m.n_shared_experts:
+        hs = jax.nn.silu(xf @ p["ws1"]) * (xf @ p["ws3"])
+        yf = yf + (hs @ p["ws2"]).astype(jnp.float32)
+
+    y = yf.astype(x.dtype).reshape(b, s, d)
+    aux = {"load_balance": load_balance, "router_z": router_z}
+    return y, aux

@@ -1,0 +1,82 @@
+"""Parameter specification & materialization (no flax — params are plain
+pytrees of arrays, described first as ``ParamSpec`` trees so the dry-run
+can build ShapeDtypeStructs + shardings without allocating anything).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding.logical import guarded_sharding, sharding_for
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple                       # logical axis names, len == len(shape)
+    init: str = "fan_in"              # fan_in | normal | zeros | ones
+    scale: float = 1.0
+    dtype: Optional[str] = None       # override model compute dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def abstract_params(specs, dtype: str, mesh=None, rules=None):
+    """ParamSpec tree → ShapeDtypeStruct tree (with shardings if mesh)."""
+    def one(s: ParamSpec):
+        dt = jnp.dtype(s.dtype or dtype)
+        if mesh is not None:
+            return jax.ShapeDtypeStruct(
+                s.shape, dt,
+                sharding=guarded_sharding(s.shape, s.axes, rules, mesh))
+        return jax.ShapeDtypeStruct(s.shape, dt)
+    return jax.tree.map(one, specs, is_leaf=_is_spec)
+
+
+def axes_tree(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def init_params(specs, key: jax.Array, dtype: str):
+    """Materialize parameters (smoke tests / real training only)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for s, k in zip(leaves, keys):
+        dt = jnp.dtype(s.dtype or dtype)
+        if s.init == "zeros":
+            v = jnp.zeros(s.shape, dt)
+        elif s.init == "ones":
+            v = jnp.ones(s.shape, dt)
+        elif s.init == "normal":
+            v = (jax.random.normal(k, s.shape, jnp.float32) *
+                 (0.02 * s.scale)).astype(dt)
+        else:  # fan_in
+            fan = s.shape[-2] if len(s.shape) >= 2 else max(s.shape[-1], 1)
+            std = s.scale / np.sqrt(max(fan, 1))
+            v = (jax.random.normal(k, s.shape, jnp.float32) * std).astype(dt)
+        out.append(v)
+    return jax.tree.unflatten(treedef, out)
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    return int(sum(int(np.prod(s.shape)) for s in leaves))
+
+
+def tree_bytes(specs, dtype: str) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    total = 0
+    for s in leaves:
+        dt = jnp.dtype(s.dtype or dtype)
+        total += int(np.prod(s.shape)) * dt.itemsize
+    return total

@@ -1,0 +1,512 @@
+"""Decoder-only LM covering the dense / moe / ssm / hybrid / vlm families.
+
+One definition, scan-over-layers (stacked params ⇒ small HLO at 512
+devices), configurable remat, logical-axis annotations on every param.
+Modes:
+  * train:   tokens+labels → (loss, metrics)
+  * prefill: tokens → (last-position logits, KV/SSM cache)
+  * decode:  one token + cache → (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import (apply_rope, attention_specs, chunked_attention,
+                     decode_attention, dense_attention, mlp_specs, rmsnorm,
+                     rope_tables, swiglu)
+from .mamba2 import (mamba_decode, mamba_dims, mamba_forward, mamba_specs)
+from .moe import moe_ffn, moe_specs
+from .params import ParamSpec
+
+
+# --------------------------------------------------------------- specs
+def _stack(specs: dict, n: int) -> dict:
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init,
+                            s.scale, s.dtype),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def block_specs(cfg: ModelConfig) -> dict:
+    """One transformer block (attention + FFN/MoE)."""
+    d = cfg.d_model
+    sp = {
+        "attn_norm": ParamSpec((d,), ("embed_noshard",), init="ones",
+                               dtype="float32"),
+        "attn": attention_specs(d, cfg.n_q_heads, cfg.n_kv_heads, cfg.hd),
+        "mlp_norm": ParamSpec((d,), ("embed_noshard",), init="ones",
+                              dtype="float32"),
+    }
+    if cfg.moe is not None:
+        sp["moe"] = moe_specs(cfg)
+    else:
+        sp["mlp"] = mlp_specs(d, cfg.d_ff)
+    return sp
+
+
+def mamba_block_specs(cfg: ModelConfig) -> dict:
+    return {
+        "norm": ParamSpec((cfg.d_model,), ("embed_noshard",), init="ones",
+                          dtype="float32"),
+        "mixer": mamba_specs(cfg),
+    }
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab
+    sp: dict = {
+        "embed": ParamSpec((v, d), ("vocab", "embed"), init="normal"),
+        "final_norm": ParamSpec((d,), ("embed_noshard",), init="ones",
+                                dtype="float32"),
+    }
+    if not cfg.tie_embeddings:
+        sp["lm_head"] = ParamSpec((d, v), ("embed", "vocab"))
+    if cfg.family in ("dense", "moe", "vlm"):
+        sp["layers"] = _stack(block_specs(cfg), cfg.n_layers)
+    elif cfg.family == "ssm":
+        sp["layers"] = _stack(mamba_block_specs(cfg), cfg.n_layers)
+    elif cfg.family == "hybrid":
+        n_inv = cfg.n_layers // cfg.shared_every
+        sp["layers"] = _stack(mamba_block_specs(cfg), cfg.n_layers)
+        sp["shared"] = block_specs(cfg)          # ONE shared block
+        sp["shared_proj"] = ParamSpec((n_inv, 2 * d, d),
+                                      ("layers", "embed", "embed_noshard"))
+    else:
+        raise ValueError(cfg.family)
+    return sp
+
+
+# --------------------------------------------------------------- blocks
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=None)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+
+def attn_block(p: dict, x: jax.Array, cfg: ModelConfig, cos, sin,
+               q0=0) -> jax.Array:
+    """Full-sequence attention sub-block (pre-norm, residual outside)."""
+    xn = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", xn, p["attn"]["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xn, p["attn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xn, p["attn"]["wv"])
+    rot = int(cfg.hd * cfg.partial_rotary)
+    q = apply_rope(q, cos, sin, rot)
+    k = apply_rope(k, cos, sin, rot)
+    sq = x.shape[1]
+    if cfg.attn_impl == "dense" or sq <= cfg.attn_chunk:
+        o = dense_attention(q, k, v, q0=q0, causal=True,
+                            window=cfg.sliding_window)
+    else:
+        ck = min(cfg.attn_chunk, sq)
+        o = chunked_attention(q, k, v, q0=q0, causal=True,
+                              window=cfg.sliding_window,
+                              chunk_q=ck, chunk_k=ck)
+    return jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"]), (k, v)
+
+
+def ffn_block(p: dict, x: jax.Array, cfg: ModelConfig):
+    xn = rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+    if cfg.moe is not None:
+        y, aux = moe_ffn(p["moe"], xn, cfg)
+        return y, aux
+    return swiglu(p["mlp"], xn), {"load_balance": jnp.float32(0.0),
+                                  "router_z": jnp.float32(0.0)}
+
+
+def transformer_layer(p, x, cfg: ModelConfig, cos, sin, q0=0):
+    a, kv = attn_block(p, x, cfg, cos, sin, q0)
+    x = x + a
+    f, aux = ffn_block(p, x, cfg)
+    return (x + f).astype(x.dtype), aux, kv
+
+
+# --------------------------------------------- full-sequence forward pass
+def _embed(params, tokens, cfg: ModelConfig,
+           prefix_embeds: Optional[jax.Array]):
+    x = params["embed"][tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _unembed(params, x, cfg: ModelConfig):
+    xn = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", xn, params["embed"],
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum("bsd,dv->bsv", xn, params["lm_head"],
+                      preferred_element_type=jnp.float32)
+
+
+def forward_seq(params, tokens, cfg: ModelConfig,
+                prefix_embeds: Optional[jax.Array] = None,
+                collect_cache: bool = False):
+    """Full-sequence forward. Returns (hidden, aux, cache_kv or None)."""
+    x = _embed(params, tokens, cfg, prefix_embeds)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    rot = int(cfg.hd * cfg.partial_rotary)
+    cos, sin = rope_tables(positions, rot, cfg.rope_theta)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, lp):
+            h = carry
+            out, aux, kv = transformer_layer(lp, h, cfg, cos, sin)
+            ys = (aux, kv) if collect_cache else (aux, None)
+            return out, ys
+        body = _remat(body, cfg)
+        if cfg.scan_layers:
+            x, (auxs, kvs) = jax.lax.scan(body, x, params["layers"])
+            aux = jax.tree.map(lambda a: jnp.sum(a), auxs)
+        else:
+            auxs, kvs_l = [], []
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda t: t[i], params["layers"])
+                x, (a, kv) = body(x, lp)
+                auxs.append(a)
+                kvs_l.append(kv)
+            aux = jax.tree.map(lambda *a: jnp.sum(jnp.stack(a)), *auxs)
+            kvs = (jax.tree.map(lambda *t: jnp.stack(t), *kvs_l)
+                   if collect_cache else None)
+        return x, aux, kvs
+
+    if cfg.family == "ssm":
+        def body(carry, lp):
+            h = carry
+            y, _ = mamba_forward(lp["mixer"],
+                                 rmsnorm(h, lp["norm"], cfg.norm_eps), cfg)
+            return (h + y).astype(h.dtype), None
+        body = _remat(body, cfg)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return x, _zero_aux(), None
+
+    if cfg.family == "hybrid":
+        return _hybrid_forward_seq(params, x, cfg, cos, sin)
+
+    raise ValueError(cfg.family)
+
+
+def _zero_aux():
+    return {"load_balance": jnp.float32(0.0), "router_z": jnp.float32(0.0)}
+
+
+def _hybrid_forward_seq(params, x, cfg: ModelConfig, cos, sin):
+    """Zamba2-style: scan over super-blocks of `shared_every` mamba layers
+    followed by one invocation of the SHARED attention block (weights
+    common, per-invocation concat down-projection)."""
+    k = cfg.shared_every
+    n_inv = cfg.n_layers // k
+    x0 = x                                 # residual stream of embeddings
+    stacked = params["layers"]
+    grouped = jax.tree.map(
+        lambda t: t.reshape((n_inv, k) + t.shape[1:]), stacked)
+    shared = params["shared"]
+
+    def super_block(carry, inp):
+        h = carry
+        mlayers, proj = inp
+
+        def mamba_step(hc, lp):
+            y, _ = mamba_forward(lp["mixer"],
+                                 rmsnorm(hc, lp["norm"], cfg.norm_eps), cfg)
+            return (hc + y).astype(hc.dtype), None
+        h, _ = jax.lax.scan(mamba_step, h, mlayers)
+        inp2 = jnp.concatenate([h, x0], axis=-1) @ proj
+        a, _ = attn_block(shared, inp2, cfg, cos, sin)
+        f, _ = ffn_block(shared, inp2 + a, cfg)
+        h = (h + a + f).astype(h.dtype)
+        return h, None
+
+    super_block = _remat(super_block, cfg)
+    x, _ = jax.lax.scan(super_block, x, (grouped, params["shared_proj"]))
+    return x, _zero_aux(), None
+
+
+# --------------------------------------------------------------- training
+def lm_loss(params, batch: dict, cfg: ModelConfig):
+    """batch: tokens (B,S) int32, labels (B,S) int32 (-1 = masked),
+    optional prefix_embeds (B,P,D)."""
+    prefix = batch.get("prefix_embeds")
+    x, aux, _ = forward_seq(params, batch["tokens"], cfg, prefix)
+    if prefix is not None:
+        x = x[:, prefix.shape[1]:]
+    logits = _unembed(params, x, cfg).astype(jnp.float32)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    loss = nll
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux["load_balance"] \
+                    + cfg.moe.router_z_weight * aux["router_z"]
+    return loss, {"nll": nll, **aux}
+
+
+# ---------------------------------------------------------------- serving
+def cache_spec(cfg: ModelConfig, batch: int, cache_len: int):
+    """Logical description of the decode cache: {name: (shape, axes, dtype)}."""
+    out = {}
+    t = cache_len
+    if cfg.sliding_window is not None:
+        t = min(cache_len, cfg.sliding_window)
+    if cfg.family in ("dense", "moe", "vlm"):
+        kv = (cfg.n_layers, batch, t, cfg.n_kv_heads, cfg.hd)
+        axes = ("layers", "batch", "kv_seq", "kv_heads", "qkv")
+        out["k"] = (kv, axes, cfg.dtype)
+        out["v"] = (kv, axes, cfg.dtype)
+    elif cfg.family in ("ssm", "hybrid"):
+        d_in, n_heads, conv_dim = mamba_dims(cfg)
+        s = cfg.ssm
+        out["conv"] = ((cfg.n_layers, batch, s.d_conv - 1, conv_dim),
+                       ("layers", "batch", "conv", "ssm_inner"), cfg.dtype)
+        out["ssm"] = ((cfg.n_layers, batch, n_heads, s.head_dim, s.d_state),
+                      ("layers", "batch", "ssm_inner", "qkv", "ssm_state"),
+                      "float32")
+        if cfg.family == "hybrid":
+            n_inv = cfg.n_layers // cfg.shared_every
+            kv = (n_inv, batch, t, cfg.n_kv_heads, cfg.hd)
+            axes = ("layers", "batch", "kv_seq", "kv_heads", "qkv")
+            out["k"] = (kv, axes, cfg.dtype)
+            out["v"] = (kv, axes, cfg.dtype)
+    out["pos"] = ((), (), "int32")
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    return {name: jnp.zeros(shape, jnp.dtype(dt)) if shape else
+            jnp.zeros((), jnp.dtype(dt))
+            for name, (shape, axes, dt) in
+            cache_spec(cfg, batch, cache_len).items()}
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache_len: int,
+            prefix_embeds: Optional[jax.Array] = None):
+    """Run the prompt, return (last-token logits, populated cache)."""
+    b, s = tokens.shape
+    p_len = 0 if prefix_embeds is None else prefix_embeds.shape[1]
+    total = s + p_len
+    cache = init_cache(cfg, b, cache_len)
+    if cfg.family in ("dense", "moe", "vlm"):
+        x, aux, kvs = forward_seq(params, tokens, cfg, prefix_embeds,
+                                  collect_cache=True)
+        k_new, v_new = kvs
+        t = cache["k"].shape[2]
+        if cfg.sliding_window is not None and total > t:
+            # keep the last `t` positions, rotated so slot = pos % t
+            k_tail = k_new[:, :, total - t:]
+            v_tail = v_new[:, :, total - t:]
+            shift = total % t
+            k_tail = jnp.roll(k_tail, shift, axis=2)
+            v_tail = jnp.roll(v_tail, shift, axis=2)
+            cache["k"], cache["v"] = k_tail, v_tail
+        else:
+            cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k_new, 0, axis=2)
+            cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v_new, 0, axis=2)
+        logits = _unembed(params, x[:, -1:], cfg)
+    elif cfg.family == "ssm":
+        x, logits, cache = _ssm_prefill(params, tokens, cfg, cache)
+    elif cfg.family == "hybrid":
+        x, logits, cache = _hybrid_prefill(params, tokens, cfg, cache)
+    else:
+        raise ValueError(cfg.family)
+    cache["pos"] = jnp.asarray(total, jnp.int32)
+    return logits, cache
+
+
+def _ssm_prefill(params, tokens, cfg, cache):
+    x = _embed(params, tokens, cfg, None)
+
+    def body(carry, inp):
+        h = carry
+        lp, conv0, ssm0 = inp
+        y, nc = mamba_forward(lp["mixer"],
+                              rmsnorm(h, lp["norm"], cfg.norm_eps), cfg,
+                              cache={"conv": conv0, "ssm": ssm0})
+        return (h + y).astype(h.dtype), (nc["conv"], nc["ssm"])
+
+    body = _remat(body, cfg)
+    x, (convs, ssms) = jax.lax.scan(
+        body, x, (params["layers"], cache["conv"], cache["ssm"]))
+    cache = dict(cache, conv=convs, ssm=ssms)
+    logits = _unembed(params, x[:, -1:], cfg)
+    return x, logits, cache
+
+
+def _hybrid_prefill(params, tokens, cfg, cache):
+    x = _embed(params, tokens, cfg, None)
+    s = x.shape[1]
+    rot = int(cfg.hd * cfg.partial_rotary)
+    cos, sin = rope_tables(jnp.arange(s), rot, cfg.rope_theta)
+    k = cfg.shared_every
+    n_inv = cfg.n_layers // k
+    x0 = x
+    grouped = jax.tree.map(
+        lambda t: t.reshape((n_inv, k) + t.shape[1:]), params["layers"])
+    conv_g = cache["conv"].reshape((n_inv, k) + cache["conv"].shape[1:])
+    ssm_g = cache["ssm"].reshape((n_inv, k) + cache["ssm"].shape[1:])
+    shared = params["shared"]
+
+    def super_block(carry, inp):
+        h = carry
+        mlayers, proj, conv0, ssm0 = inp
+
+        def mamba_step(hc, lp_c):
+            lp, c0, s0 = lp_c
+            y, nc = mamba_forward(lp["mixer"],
+                                  rmsnorm(hc, lp["norm"], cfg.norm_eps),
+                                  cfg, cache={"conv": c0, "ssm": s0})
+            return (hc + y).astype(hc.dtype), (nc["conv"], nc["ssm"])
+        h, (convs, ssms) = jax.lax.scan(mamba_step, h,
+                                        (mlayers, conv0, ssm0))
+        inp2 = jnp.concatenate([h, x0], axis=-1) @ proj
+        a, kv = attn_block(shared, inp2, cfg, cos, sin)
+        f, _ = ffn_block(shared, inp2 + a, cfg)
+        h = (h + a + f).astype(h.dtype)
+        return h, (convs, ssms, kv)
+
+    super_block = _remat(super_block, cfg)
+    x, (convs, ssms, kvs) = jax.lax.scan(
+        super_block, x, (grouped, params["shared_proj"], conv_g, ssm_g))
+    cache = dict(cache)
+    cache["conv"] = convs.reshape(cache["conv"].shape)
+    cache["ssm"] = ssms.reshape(cache["ssm"].shape)
+    k_new, v_new = kvs
+    t = cache["k"].shape[2]
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new, 0, axis=2)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new, 0, axis=2)
+    logits = _unembed(params, x[:, -1:], cfg)
+    return x, logits, cache
+
+
+def decode_step(params, token, cache, cfg: ModelConfig):
+    """token: (B,) int32 — the token at position cache['pos'].
+    Returns (logits (B,1,V), new cache)."""
+    pos = cache["pos"]
+    x = params["embed"][token][:, None, :]                 # (B, 1, D)
+    rot = int(cfg.hd * cfg.partial_rotary)
+    cos, sin = rope_tables(pos[None], rot, cfg.rope_theta)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        # The KV cache rides in the scan CARRY and is updated in place
+        # with a layer-indexed dynamic_update_slice: only the one-token
+        # slot is written per layer. Passing per-layer caches through
+        # xs/ys instead makes XLA re-stack a full layer cache every step
+        # (~2× the entire cache in HBM traffic per token — measured).
+        t = cache["k"].shape[2]
+        slot = pos % t if cfg.sliding_window is not None else pos
+
+        def body(carry, inp):
+            h, kall, vall = carry
+            lp, li = inp
+            xn = rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dhk->bshk", xn, lp["attn"]["wq"])
+            kn = jnp.einsum("bsd,dhk->bshk", xn, lp["attn"]["wk"])
+            vn = jnp.einsum("bsd,dhk->bshk", xn, lp["attn"]["wv"])
+            q = apply_rope(q, cos, sin, rot)
+            kn = apply_rope(kn, cos, sin, rot)
+            zero = jnp.zeros((), jnp.int32)
+            kall = jax.lax.dynamic_update_slice(
+                kall, kn[None].astype(kall.dtype),
+                (li, zero, slot, zero, zero))
+            vall = jax.lax.dynamic_update_slice(
+                vall, vn[None].astype(vall.dtype),
+                (li, zero, slot, zero, zero))
+            kc = jax.lax.dynamic_index_in_dim(kall, li, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vall, li, 0, keepdims=False)
+            o = decode_attention(q, kc, vc, pos,
+                                 window=cfg.sliding_window)
+            h = h + jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+            f, _ = ffn_block(lp, h, cfg)
+            return ((h + f).astype(h.dtype), kall, vall), None
+
+        li = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+        (x, ks, vs), _ = jax.lax.scan(
+            body, (x, cache["k"], cache["v"]), (params["layers"], li))
+        cache = dict(cache, k=ks, v=vs)
+    elif cfg.family == "ssm":
+        def body(carry, inp):
+            h = carry
+            lp, c0, s0 = inp
+            y, nc = mamba_decode(lp["mixer"],
+                                 rmsnorm(h, lp["norm"], cfg.norm_eps), cfg,
+                                 {"conv": c0, "ssm": s0})
+            return (h + y).astype(h.dtype), (nc["conv"], nc["ssm"])
+        x, (convs, ssms) = jax.lax.scan(
+            body, x, (params["layers"], cache["conv"], cache["ssm"]))
+        cache = dict(cache, conv=convs, ssm=ssms)
+    elif cfg.family == "hybrid":
+        x, cache = _hybrid_decode(params, x, cache, cfg, cos, sin, pos)
+    else:
+        raise ValueError(cfg.family)
+
+    logits = _unembed(params, x, cfg)
+    cache["pos"] = pos + 1
+    return logits, cache
+
+
+def _hybrid_decode(params, x, cache, cfg, cos, sin, pos):
+    k = cfg.shared_every
+    n_inv = cfg.n_layers // k
+    x0 = x
+    grouped = jax.tree.map(
+        lambda t: t.reshape((n_inv, k) + t.shape[1:]), params["layers"])
+    conv_g = cache["conv"].reshape((n_inv, k) + cache["conv"].shape[1:])
+    ssm_g = cache["ssm"].reshape((n_inv, k) + cache["ssm"].shape[1:])
+    shared = params["shared"]
+    rot = int(cfg.hd * cfg.partial_rotary)
+
+    def super_block(carry, inp):
+        h, kall, vall = carry
+        mlayers, proj, c0, s0, ii = inp
+
+        def mamba_step(hc, lp_c):
+            lp, cc, ss = lp_c
+            y, nc = mamba_decode(lp["mixer"],
+                                 rmsnorm(hc, lp["norm"], cfg.norm_eps),
+                                 cfg, {"conv": cc, "ssm": ss})
+            return (hc + y).astype(hc.dtype), (nc["conv"], nc["ssm"])
+        h, (convs, ssms) = jax.lax.scan(mamba_step, h, (mlayers, c0, s0))
+        inp2 = jnp.concatenate([h, x0], axis=-1) @ proj
+        xn = rmsnorm(inp2, shared["attn_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", xn, shared["attn"]["wq"])
+        kn = jnp.einsum("bsd,dhk->bshk", xn, shared["attn"]["wk"])
+        vn = jnp.einsum("bsd,dhk->bshk", xn, shared["attn"]["wv"])
+        q = apply_rope(q, cos, sin, rot)
+        kn = apply_rope(kn, cos, sin, rot)
+        zero = jnp.zeros((), jnp.int32)
+        kall = jax.lax.dynamic_update_slice(
+            kall, kn[None].astype(kall.dtype), (ii, zero, pos, zero, zero))
+        vall = jax.lax.dynamic_update_slice(
+            vall, vn[None].astype(vall.dtype), (ii, zero, pos, zero, zero))
+        kc = jax.lax.dynamic_index_in_dim(kall, ii, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vall, ii, 0, keepdims=False)
+        o = decode_attention(q, kc, vc, pos)
+        a = jnp.einsum("bshk,hkd->bsd", o, shared["attn"]["wo"])
+        f, _ = ffn_block(shared, inp2 + a, cfg)
+        h = (h + a + f).astype(h.dtype)
+        return (h, kall, vall), (convs, ssms)
+
+    ii = jnp.arange(n_inv, dtype=jnp.int32)
+    (x, ks, vs), (convs, ssms) = jax.lax.scan(
+        super_block, (x, cache["k"], cache["v"]),
+        (grouped, params["shared_proj"], conv_g, ssm_g, ii))
+    cache = dict(cache)
+    cache["conv"] = convs.reshape(cache["conv"].shape)
+    cache["ssm"] = ssms.reshape(cache["ssm"].shape)
+    cache["k"], cache["v"] = ks, vs
+    return x, cache

@@ -1,0 +1,112 @@
+"""Unified model interface: specs / loss / prefill / decode per family,
+plus abstract batch descriptions for the dry-run's ``input_specs``."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeCell
+from . import encdec as ed
+from . import transformer as tr
+
+ENC_MEM_LEN = 4096     # encoder memory length for enc-dec decode shapes
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    if cfg.family == "encdec":
+        return ed.encdec_specs(cfg)
+    return tr.model_specs(cfg)
+
+
+def loss_fn(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return lambda params, batch: ed.encdec_loss(params, batch, cfg)
+    return lambda params, batch: tr.lm_loss(params, batch, cfg)
+
+
+def prefill_fn(cfg: ModelConfig, cache_len: int):
+    if cfg.family == "encdec":
+        return lambda params, batch: ed.encdec_prefill(
+            params, batch["src_embeds"], batch["tokens"], cfg, cache_len)
+    if cfg.family == "vlm":
+        return lambda params, batch: tr.prefill(
+            params, batch["tokens"], cfg, cache_len,
+            prefix_embeds=batch["prefix_embeds"])
+    return lambda params, batch: tr.prefill(params, batch["tokens"], cfg,
+                                            cache_len)
+
+
+def decode_fn(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return lambda params, token, cache: ed.encdec_decode_step(
+            params, token, cache, cfg)
+    return lambda params, token, cache: tr.decode_step(params, token,
+                                                       cache, cfg)
+
+
+# ------------------------------------------------------------------ batches
+def batch_desc(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """{name: (shape, dtype, logical_axes)} for the given shape cell."""
+    b, s = cell.global_batch, cell.seq_len
+    if cfg.family == "vlm" and cfg.n_prefix_embeds:
+        # the image-patch prefix is part of the context budget: text
+        # tokens + prefix == seq_len (the decode cache is seq_len long)
+        s = max(s - cfg.n_prefix_embeds, 1)
+    if cell.kind == "train":
+        if cfg.family == "encdec":
+            return {
+                "src_embeds": ((b, s, cfg.d_model), cfg.dtype,
+                               ("batch", "seq", "embed_noshard")),
+                "tokens": ((b, s), "int32", ("batch", "seq")),
+                "labels": ((b, s), "int32", ("batch", "seq")),
+            }
+        d = {
+            "tokens": ((b, s), "int32", ("batch", "seq")),
+            "labels": ((b, s), "int32", ("batch", "seq")),
+        }
+        if cfg.family == "vlm":
+            d["prefix_embeds"] = ((b, cfg.n_prefix_embeds, cfg.d_model),
+                                  cfg.dtype,
+                                  ("batch", "seq", "embed_noshard"))
+        return d
+    if cell.kind == "prefill":
+        if cfg.family == "encdec":
+            return {
+                "src_embeds": ((b, s, cfg.d_model), cfg.dtype,
+                               ("batch", "seq", "embed_noshard")),
+                "tokens": ((b, 1), "int32", ("batch", "seq")),
+            }
+        d = {"tokens": ((b, s), "int32", ("batch", "seq"))}
+        if cfg.family == "vlm":
+            d["prefix_embeds"] = ((b, cfg.n_prefix_embeds, cfg.d_model),
+                                  cfg.dtype,
+                                  ("batch", "seq", "embed_noshard"))
+        return d
+    if cell.kind == "decode":
+        return {"token": ((b,), "int32", ("batch",))}
+    raise ValueError(cell.kind)
+
+
+def cache_desc(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """{name: (shape, axes, dtype)} decode-cache description."""
+    if cfg.family == "encdec":
+        return ed.encdec_cache_spec(cfg, cell.global_batch, cell.seq_len,
+                                    ENC_MEM_LEN)
+    return tr.cache_spec(cfg, cell.global_batch, cell.seq_len)
+
+
+def make_batch(cfg: ModelConfig, cell: ShapeCell, seed: int = 0) -> dict:
+    """Materialize a random batch matching batch_desc (smoke tests)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, (shape, dtype, _) in batch_desc(cfg, cell).items():
+        if dtype == "int32":
+            out[name] = jnp.asarray(
+                rng.integers(0, cfg.vocab, size=shape), jnp.int32)
+        else:
+            out[name] = jnp.asarray(
+                rng.normal(0, 0.02, size=shape), jnp.dtype(dtype))
+    return out

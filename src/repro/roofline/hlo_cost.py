@@ -1,0 +1,327 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a while-loop body ONCE,
+which silently undercounts every scan-over-layers model by ~n_layers× (and
+collectives inside FSDP scans by the same factor). This module re-derives
+FLOPs / HBM bytes / collective bytes from the post-partitioning HLO text
+with call-graph multipliers:
+
+  * while ops: body and condition costs × trip count (parsed from the
+    condition's loop-bound constant — exact for lax.scan/fori_loop);
+  * fusion ``calls=``: internal ops contribute FLOPs only (one kernel ⇒
+    operand/output bytes are counted once at the fusion call site);
+  * dot FLOPs = 2 · |out| · Π(contracting dims); elementwise/transcendental
+    ops ≈ 1 FLOP per output element (matmul-dominated workloads make this
+    a <few-% correction);
+  * collective bytes = max(in, out) per op, × multiplier, classified
+    cross-pod by materializing the replica groups.
+
+All quantities are per-device (the HLO is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\((.*)\)\s+->")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s+=\s+"
+    r"(\([^)]*\)|[\w\[\]{},]+)\s+([\w\-]+)\(")
+_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s+(\(?[\w\[\]{},]+\)?)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_RG_EXPLICIT = re.compile(r"replica_groups=\{\{([\d,}{\s]+)\}\}")
+_RG_IOTA = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "rsqrt", "sqrt", "logistic", "sine", "cosine", "negate", "abs",
+    "compare", "select", "and", "or", "xor", "not", "convert", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "sign",
+    "clamp", "erf", "atan2", "remainder", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "reduce",
+}
+NO_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+            "bitcast", "after-all", "partition-id", "replica-id", "iota",
+            "custom-call", "rng-bit-generator",
+            # control flow: carries are not HBM round-trips
+            "while", "conditional", "call", "copy-start", "copy-done"}
+# ops whose true traffic is O(slice/update), not O(operand buffer):
+# handled specially in walk() — dynamic-slice/gather ≈ 2·|out|;
+# dynamic-update-slice ≈ 2·|update| (in-place); scatter ≈ 2·|updates|.
+SLICING = {"dynamic-slice", "gather", "dynamic-update-slice", "scatter"}
+
+
+def _shape_info(txt: str):
+    """(total_bytes, [dims of first shape], n_elems_total)."""
+    total_b = 0
+    total_n = 0
+    first_dims = None
+    for m in _SHAPE_RE.finditer(txt):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",") if x]
+        n = 1
+        for v in d:
+            n *= v
+        total_b += n * _DTYPE_BYTES[dt]
+        total_n += n
+        if first_dims is None:
+            first_dims = d
+    return total_b, (first_dims or []), total_n
+
+
+@dataclass
+class _Op:
+    name: str
+    kind: str
+    out_bytes: int
+    out_elems: int
+    out_dims: list
+    line: str
+    operands: list
+
+
+@dataclass
+class _Comp:
+    name: str
+    ops: list = field(default_factory=list)
+    symbols: dict = field(default_factory=dict)   # name -> (bytes, dims)
+    constants: dict = field(default_factory=dict)  # name -> int value
+
+
+def _parse_computations(text: str) -> tuple:
+    comps: dict = {}
+    entry = None
+    cur: _Comp | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        h = _HEADER_RE.match(line)
+        if h and line.endswith("{"):
+            cur = _Comp(h.group(2))
+            comps[cur.name] = cur
+            if h.group(1):
+                entry = cur.name
+            for pm in _PARAM_RE.finditer(h.group(3)):
+                b, dims, _ = _shape_info(pm.group(2))
+                cur.symbols[pm.group(1)] = (b, dims)
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m is None:
+            continue
+        name, out_t, kind = m.group(1), m.group(2), m.group(3)
+        ob, odims, oel = _shape_info(out_t)
+        # operands: %refs inside the call parens, before attribute list
+        paren = line[m.end():]
+        depth = 1
+        end = len(paren)
+        for i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = _OPERAND_RE.findall(paren[:end])
+        cur.symbols[name] = (ob, odims)
+        if kind == "constant":
+            cm = _CONST_RE.search(line)
+            if cm:
+                cur.constants[name] = int(cm.group(1))
+        cur.ops.append(_Op(name, kind, ob, oel, odims, line, operands))
+    return comps, entry
+
+
+def _group_crosses_pod(line: str, pod_size: int) -> bool:
+    m = _RG_EXPLICIT.search(line)
+    if m:
+        first = m.group(1).split("}")[0]
+        ids = [int(x) for x in first.replace("{", "").split(",") if x.strip()]
+        return len({i // pod_size for i in ids}) > 1
+    m = _RG_IOTA.search(line)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        n = int(np.prod(dims))
+        if n <= pod_size:
+            return False
+        arr = np.arange(n).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            arr = arr.transpose(perm)
+        groups = arr.reshape(g, s)
+        pods = groups // pod_size
+        return bool((pods != pods[:, :1]).any())
+    return False
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    cross_pod_bytes: float = 0.0
+    coll_by_kind: dict = field(default_factory=dict)
+    coll_count: dict = field(default_factory=dict)
+
+
+def analyze_hlo(text: str, pod_size: int = 256,
+                structural_only: bool = True) -> HloCost:
+    """``structural_only`` (default): count FLOPs from dot/reduce ops and
+    bytes from dot/reduce/sort/slicing/collective ops only. The CPU
+    backend's optimized HLO is littered with artifacts a TPU build would
+    not have (bf16→f32 convert chains, physical transposes for CPU dot
+    layouts, un-aliased full-buffer copies); matmul-structural ops are
+    backend-neutral, and elementwise traffic fuses into them on TPU.
+    ``structural_only=False`` counts everything (upper bound)."""
+    comps, entry = _parse_computations(text)
+    out = HloCost()
+    if entry is None:
+        return out
+
+    trip_cache: dict = {}
+
+    def trip_count(cond_name: str) -> int:
+        """Loop bound from the condition's compare-against-constant (exact
+        for lax.scan / fori_loop); falls back to max constant."""
+        if cond_name in trip_cache:
+            return trip_cache[cond_name]
+        t = 0
+        comp = comps.get(cond_name)
+        if comp is not None:
+            for op in comp.ops:
+                if op.kind == "compare":
+                    for o in op.operands:
+                        if o in comp.constants:
+                            t = max(t, comp.constants[o])
+                    # inline constant form: compare(%x, s32[] constant(8))
+                    for v in _CONST_RE.findall(op.line):
+                        t = max(t, int(v))
+            if t == 0:
+                consts = [v for op in comp.ops
+                          for v in map(int, _CONST_RE.findall(op.line))]
+                if consts:
+                    t = max(consts)
+        t = max(t, 1)
+        trip_cache[cond_name] = t
+        return t
+
+    def op_flops(comp: _Comp, op: _Op) -> float:
+        if op.kind == "dot":
+            lhs = comp.symbols.get(op.operands[0] if op.operands else "",
+                                   (0, []))[1]
+            mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+            contract = 1
+            if mc and lhs:
+                for i in mc.group(1).split(","):
+                    if i and int(i) < len(lhs):
+                        contract *= lhs[int(i)]
+            return 2.0 * op.out_elems * max(contract, 1)
+        if structural_only:
+            if op.kind == "reduce":
+                return float(op.out_elems)
+            return 0.0
+        if op.kind in ELEMENTWISE:
+            return float(op.out_elems)
+        return 0.0
+
+    STRUCTURAL_BYTES = {"dot", "reduce", "sort", "convolution",
+                        "reduce-window"}
+
+    def walk(name: str, mult: float, flops_only: bool,
+             depth: int = 0) -> None:
+        comp = comps.get(name)
+        if comp is None or depth > 64:
+            return
+        for op in comp.ops:
+            out.flops += mult * op_flops(comp, op)
+            refs_fusion = re.search(r"calls=%([\w\.\-]+)", op.line)
+            if op.kind == "while":
+                mb = re.search(r"body=%([\w\.\-]+)", op.line)
+                mc = re.search(r"condition=%([\w\.\-]+)", op.line)
+                t = trip_count(mc.group(1)) if mc else 1
+                if mb:
+                    walk(mb.group(1), mult * t, flops_only, depth + 1)
+                if mc:
+                    walk(mc.group(1), mult * t, True, depth + 1)
+                continue
+            if op.kind == "fusion" and refs_fusion:
+                walk(refs_fusion.group(1), mult, True, depth + 1)
+            if op.kind == "conditional":
+                for bn in re.findall(r"%([\w\.\-]+)",
+                                     op.line.split("branch_computations")[-1]
+                                     )[:4]:
+                    walk(bn, mult, flops_only, depth + 1)
+            if op.kind.rstrip("-start").rstrip("-done") in COLLECTIVES or \
+               op.kind in COLLECTIVES or \
+               op.kind.replace("-start", "") in COLLECTIVES:
+                if op.kind.endswith("-done"):
+                    continue
+                in_b = sum(comp.symbols.get(o, (0, []))[0]
+                           for o in op.operands)
+                b = mult * max(op.out_bytes, in_b)
+                kind = op.kind.replace("-start", "")
+                out.coll_bytes += b
+                out.coll_by_kind[kind] = out.coll_by_kind.get(kind, 0) + b
+                out.coll_count[kind] = out.coll_count.get(kind, 0) + mult
+                if _group_crosses_pod(op.line, pod_size):
+                    out.cross_pod_bytes += b
+            if not flops_only and op.kind not in NO_BYTES:
+                if structural_only and op.kind not in STRUCTURAL_BYTES \
+                        and op.kind not in SLICING \
+                        and not (op.kind == "fusion" and
+                                 "dynamic-update-slice" in op.name):
+                    continue
+                if op.kind == "fusion" and "dynamic-update-slice" in op.name:
+                    # in-place cache/accumulator update: with buffer
+                    # aliasing (loop carries, donated args) the operand
+                    # whose SHAPE matches the output is the same HBM
+                    # buffer (a convert may change dtype bytes, so match
+                    # shapes, not sizes); traffic = the small updates.
+                    small = sum(
+                        comp.symbols.get(o, (0, []))[0]
+                        for o in op.operands
+                        if comp.symbols.get(o, (0, []))[1] != op.out_dims)
+                    matched = any(
+                        comp.symbols.get(o, (0, []))[1] == op.out_dims
+                        for o in op.operands)
+                    if matched:
+                        out.bytes += mult * 2 * small
+                        continue
+                if op.kind in SLICING:
+                    if op.kind == "dynamic-update-slice" and \
+                            len(op.operands) >= 2:
+                        upd = comp.symbols.get(op.operands[1], (0, []))[0]
+                        out.bytes += mult * 2 * upd
+                    elif op.kind == "scatter" and len(op.operands) >= 3:
+                        upd = comp.symbols.get(op.operands[2], (0, []))[0]
+                        out.bytes += mult * 2 * upd
+                    else:
+                        out.bytes += mult * 2 * op.out_bytes
+                else:
+                    in_b = sum(comp.symbols.get(o, (0, []))[0]
+                               for o in op.operands)
+                    out.bytes += mult * (op.out_bytes + in_b)
+
+    walk(entry, 1.0, False)
+    return out

@@ -1,0 +1,9 @@
+"""TPU v5e hardware constants for the roofline model (per chip)."""
+
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW = 50e9                 # bytes/s per link (≈ usable per direction)
+DCN_BW = 25e9                 # bytes/s per host, inter-pod (approximate)
+HBM_BYTES = 16 * 2**30        # 16 GiB HBM per chip
+VMEM_BYTES = 16 * 2**20       # ~16 MiB more-or-less usable VMEM
+MXU_DIM = 128

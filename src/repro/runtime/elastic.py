@@ -1,0 +1,44 @@
+"""Elastic scaling: rebuild the mesh from the devices that are alive and
+reshard state onto it.
+
+The mechanism: ``plan_mesh`` picks the largest usable (data, model) grid
+for the surviving device count (model-parallel degree is pinned by the
+config's divisibility constraints; the data axis absorbs the loss);
+``reshard_state`` is checkpoint-restore against the new mesh's shardings
+(repro.ckpt restore is already mesh-agnostic). On a real fleet the
+coordinator triggers this on hardware failure; tests drive it directly.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh
+
+from ..sharding.logical import sharding_for
+
+
+def plan_mesh(n_devices: int, model_parallel: int,
+              axis_names=("data", "model")) -> tuple:
+    """Largest (data, model) grid with the pinned model degree."""
+    mp = model_parallel
+    while mp > 1 and n_devices % mp:
+        mp //= 2
+    data = n_devices // mp
+    return (data, mp), axis_names
+
+
+def make_mesh_from(devices: Sequence, model_parallel: int) -> Mesh:
+    shape, names = plan_mesh(len(devices), model_parallel)
+    import numpy as np
+    arr = np.asarray(devices[:shape[0] * shape[1]]).reshape(shape)
+    return Mesh(arr, names)
+
+
+def reshard_state(state, specs_axes, mesh: Mesh, rules: dict):
+    """device_put every leaf against the new mesh (host round-trip)."""
+    def one(leaf, axes):
+        import numpy as np
+        host = np.asarray(jax.device_get(leaf))
+        return jax.device_put(host, sharding_for(axes, rules, mesh))
+    return jax.tree.map(one, state, specs_axes)

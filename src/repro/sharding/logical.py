@@ -1,0 +1,144 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every parameter and activation is annotated with *logical* axis names;
+a rule table maps logical names to mesh axes per run configuration. This
+is what makes the same model definition run as pure-DP on 8 chips and
+DP×TP×EP(+FSDP) on 512 without touching model code.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis vocabulary
+#   batch      — global batch                 → ("pod", "data")
+#   seq        — sequence (activations)       → None (or "model" under SP)
+#   embed      — d_model                      → None (or "data" under FSDP)
+#   heads      — attention q heads            → "model"
+#   kv_heads   — attention kv heads           → "model" if divisible
+#   qkv        — per-head feature             → None
+#   mlp        — FFN hidden                   → "model"
+#   vocab      — vocabulary                   → "model"
+#   experts    — MoE experts                  → "model"
+#   layers     — stacked scan dim             → None
+#   kv_seq     — KV-cache sequence            → "model" (flash-decode shards it)
+#   ssm_state  — SSD state dim                → None
+#   ssm_inner  — SSD inner (expand*d)         → "model"
+
+
+def default_rules(fsdp: bool = False, seq_shard: bool = False,
+                  kv_heads_shardable: bool = True) -> dict:
+    return {
+        "batch": ("pod", "data"),
+        "seq": "model" if seq_shard else None,
+        "embed": "data" if fsdp else None,
+        "embed_noshard": None,
+        "heads": "model",
+        "kv_heads": "model" if kv_heads_shardable else None,
+        "qkv": None,
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        # TP-within-expert: when the expert COUNT doesn't divide the model
+        # axis (mixtral: 8 experts on 16-way), the per-expert FFN dim
+        # shards instead; spec_for's double-use guard keeps the two rules
+        # mutually exclusive per tensor.
+        "expert_mlp": "model",
+        "layers": None,
+        "kv_seq": "model",
+        "ssm_state": None,
+        "ssm_inner": "model",
+        "conv": None,
+    }
+
+
+def spec_for(axes: tuple, rules: dict, mesh: Mesh,
+             shape: Optional[tuple] = None) -> P:
+    """Logical axes → PartitionSpec, dropping mesh axes that don't exist
+    (e.g. "pod" on the single-pod mesh), avoiding double-use, and — when
+    ``shape`` is given — dropping assignments whose dim isn't divisible by
+    the mesh extent (56 heads or a 50280 vocab can't shard 16 ways; the
+    guard degrades them to replicated instead of erroring)."""
+    used: set = set()
+    parts = []
+    for i, ax in enumerate(axes):
+        r = rules.get(ax, None) if ax is not None else None
+        if r is None:
+            parts.append(None)
+            continue
+        names = (r,) if isinstance(r, str) else tuple(r)
+        names = tuple(n for n in names
+                      if n in mesh.axis_names and n not in used)
+        if shape is not None and names:
+            extent = 1
+            for n in names:
+                extent *= mesh.shape[n]
+            if extent == 0 or shape[i] % extent != 0:
+                names = ()
+        used.update(names)
+        parts.append(names if len(names) > 1 else (names[0] if names else None))
+    return P(*parts)
+
+
+def guarded_sharding(shape: tuple, axes: tuple, rules: dict,
+                     mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(axes, rules, mesh, shape))
+
+
+def sharding_for(axes: tuple, rules: dict, mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(axes, rules, mesh))
+
+
+def tree_shardings(axes_tree, rules: dict, mesh: Mesh):
+    """Map a pytree of logical-axes tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda axes: sharding_for(axes, rules, mesh),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and
+        all(isinstance(e, (str, type(None))) for e in x))
+
+
+def constrain(x: jax.Array, axes: tuple, rules: Optional[dict],
+              mesh: Optional[Mesh]):
+    """Activation sharding constraint by logical axes (no-op w/o mesh)."""
+    if rules is None or mesh is None or mesh.empty:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(axes, rules, mesh)))
+
+
+def shardable(dim: int, mesh: Mesh, axis: str = "model") -> bool:
+    if mesh is None or axis not in mesh.axis_names:
+        return False
+    return dim % mesh.shape[axis] == 0
+
+
+# --------------------------------------------------------------------------
+# Active-mesh context: model code (e.g. the MoE dispatch) adds activation
+# sharding constraints only when the launcher declares the mesh axes it is
+# lowering under; smoke tests / host runs see a no-op.
+_ACTIVE_AXES: tuple = ()
+
+
+def set_active_mesh_axes(names) -> None:
+    global _ACTIVE_AXES
+    _ACTIVE_AXES = tuple(names or ())
+
+
+def maybe_constrain(x: jax.Array, spec_elems: tuple) -> jax.Array:
+    """with_sharding_constraint filtered to the declared mesh axes;
+    no-op when no mesh is active."""
+    if not _ACTIVE_AXES:
+        return x
+    clean = []
+    for e in spec_elems:
+        if e is None:
+            clean.append(None)
+            continue
+        names = (e,) if isinstance(e, str) else tuple(e)
+        names = tuple(n for n in names if n in _ACTIVE_AXES)
+        clean.append(names if len(names) > 1 else
+                     (names[0] if names else None))
+    return jax.lax.with_sharding_constraint(x, P(*clean))

@@ -1,0 +1,34 @@
+"""Gradient compression: int8 with stochastic rounding.
+
+On a real multi-pod fabric this wraps the cross-pod all-reduce (compress →
+reduce → decompress), cutting inter-pod collective bytes 4×; under pjit
+the all-reduce is XLA-inserted, so we apply the transform to the gradient
+pytree at the same point in the step — the quantization error model (and
+the roofline collective-bytes accounting in EXPERIMENTS.md) is identical.
+Stochastic rounding keeps the compression unbiased: E[q] = g.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_compress_decompress(grads, key: jax.Array):
+    """Quantize every gradient leaf to int8 (per-tensor scale, stochastic
+    rounding) and dequantize — the numerical effect of a compressed
+    all-reduce."""
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(g, k):
+        gf = g.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-20
+        x = gf / scale
+        lo = jnp.floor(x)
+        frac = x - lo
+        up = jax.random.uniform(k, x.shape) < frac
+        q = jnp.clip(lo + up.astype(jnp.float32), -127, 127)
+        return (q * scale).astype(g.dtype)
+
+    return jax.tree.unflatten(treedef, [one(g, k)
+                                        for g, k in zip(leaves, keys)])

@@ -1,0 +1,180 @@
+"""Optimizers: AdamW (fp32 state), Adafactor (factored second moment — the
+only way a 1T-param config fits a 256-chip pod), and 8-bit Adam (int8
+block-quantized moments, the optimizer-state-compression distributed
+trick). All states are pytrees mirroring the params, so they inherit the
+params' NamedShardings under pjit (ZeRO-style state sharding for free).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Q_BLOCK = 256
+
+
+# ----------------------------------------------------------------- schedule
+def lr_schedule(base_lr: float, warmup: int = 100,
+                total: int = 10_000) -> Callable:
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(s < warmup, warm, 0.1 + 0.9 * cos)
+    return fn
+
+
+# ------------------------------------------------------------------- AdamW
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1 - b1 ** cf
+    bc2 = 1 - b2 ** cf
+
+    def upd(g, mu, nu, p):
+        g = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        step = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+        step = step + weight_decay * p.astype(jnp.float32)
+        return -lr * step, mu, nu
+
+    out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+    updates = jax.tree.map(lambda t: t[0], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    mu = jax.tree.map(lambda t: t[1], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree.map(lambda t: t[2], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    return updates, {"mu": mu, "nu": nu, "count": count}
+
+
+# --------------------------------------------------------------- Adafactor
+def adafactor_init(params):
+    def one(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"v": jax.tree.map(one, params), "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, state, params, lr, *, decay=0.8, eps=1e-30,
+                     clip=1.0, weight_decay=0.0):
+    count = state["count"] + 1
+    beta = 1.0 - count.astype(jnp.float32) ** (-decay)
+
+    def upd(g, v, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if g.ndim >= 2:
+            vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            denom = jnp.sqrt(
+                vr[..., None] * vc[..., None, :] /
+                jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)[..., None],
+                            eps))
+            nv = {"vr": vr, "vc": vc}
+        else:
+            nvv = beta * v["v"] + (1 - beta) * g2
+            denom = jnp.sqrt(nvv)
+            nv = {"v": nvv}
+        u = g / jnp.maximum(denom, eps)
+        # update clipping by RMS
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms / clip)
+        u = u + weight_decay * p.astype(jnp.float32)
+        return -lr * u, nv
+
+    out = jax.tree.map(upd, grads, state["v"], params,
+                       is_leaf=lambda x: isinstance(x, dict) and
+                       ("vr" in x or "v" in x))
+    # out mirrors params-with-tuples
+    updates = jax.tree.map(lambda t: t[0], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda t: t[1], out,
+                     is_leaf=lambda x: isinstance(x, tuple))
+    return updates, {"v": v, "count": count}
+
+
+# -------------------------------------------------------------- 8-bit Adam
+def _q_shape(p):
+    n = int(np.prod(p.shape)) if p.shape else 1
+    blocks = -(-n // Q_BLOCK)
+    return n, blocks
+
+
+def quantize_blockwise(x: jax.Array):
+    """fp32 → (int8 codes, fp32 per-block scales). Symmetric linear."""
+    n = x.size
+    blocks = -(-n // Q_BLOCK)
+    flat = jnp.pad(x.reshape(-1), (0, blocks * Q_BLOCK - n)) \
+        .reshape(blocks, Q_BLOCK)
+    scale = jnp.max(jnp.abs(flat), axis=1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.rint(flat / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_blockwise(q: jax.Array, scale: jax.Array, shape):
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = int(np.prod(shape)) if shape else 1
+    return flat[:n].reshape(shape)
+
+
+def adam8bit_init(params):
+    def one(p):
+        n, blocks = _q_shape(p)
+        return {"mu_q": jnp.zeros((blocks, Q_BLOCK), jnp.int8),
+                "mu_s": jnp.zeros((blocks,), jnp.float32),
+                "nu_q": jnp.zeros((blocks, Q_BLOCK), jnp.int8),
+                "nu_s": jnp.zeros((blocks,), jnp.float32)}
+    return {"q": jax.tree.map(one, params), "count": jnp.zeros((), jnp.int32)}
+
+
+def adam8bit_update(grads, state, params, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                    weight_decay=0.1):
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1 - b1 ** cf
+    bc2 = 1 - b2 ** cf
+
+    def upd(g, q, p):
+        g = g.astype(jnp.float32)
+        mu = dequantize_blockwise(q["mu_q"], q["mu_s"], g.shape)
+        nu = dequantize_blockwise(q["nu_q"], q["nu_s"], g.shape)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        step = (mu / bc1) / (jnp.sqrt(jnp.maximum(nu, 0.0) / bc2) + eps)
+        step = step + weight_decay * p.astype(jnp.float32)
+        mu_q, mu_s = quantize_blockwise(mu)
+        nu_q, nu_s = quantize_blockwise(nu)
+        return (-lr * step, {"mu_q": mu_q, "mu_s": mu_s,
+                             "nu_q": nu_q, "nu_s": nu_s})
+
+    is_q = lambda x: isinstance(x, dict) and "mu_q" in x
+    out = jax.tree.map(upd, grads, state["q"], params, is_leaf=is_q)
+    updates = jax.tree.map(lambda t: t[0], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    q = jax.tree.map(lambda t: t[1], out,
+                     is_leaf=lambda x: isinstance(x, tuple))
+    return updates, {"q": q, "count": count}
+
+
+OPTIMIZERS = {
+    "adamw": (adamw_init, adamw_update),
+    "adafactor": (adafactor_init, adafactor_update),
+    "adamw8bit": (adam8bit_init, adam8bit_update),
+}

@@ -1,0 +1,213 @@
+"""LIMS correctness: hypothesis property tests for exactness (range/kNN/
+point vs brute force) across metrics and parameters, plus component
+invariants (rings, LIMS-value order, rank models, search correction,
+updates, K-selection)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (LIMSIndex, MetricSpace, PolyRankModel, build_mapping,
+                        exponential_search, lims_value)
+from repro.core.metrics import dist_one_to_many
+from repro.core.rankmodel import binary_search
+from repro.data.datasets import gauss_mix, signature, skewed
+
+
+def brute_range(sp, q, r):
+    d = dist_one_to_many(q, sp.data, sp.metric)
+    return set(np.where(d <= r)[0].tolist()), d
+
+
+# ------------------------------------------------------------- exactness
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(300, 1500),
+       d=st.integers(2, 12),
+       metric=st.sampled_from(["l2", "l1", "linf"]),
+       k_clusters=st.integers(2, 24),
+       m=st.integers(1, 4),
+       n_rings=st.integers(2, 30),
+       sel=st.floats(0.001, 0.2),
+       seed=st.integers(0, 10_000))
+def test_range_query_exact(n, d, metric, k_clusters, m, n_rings, sel, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d)) ** 3          # heavy-tailed, clustered-ish
+    sp = MetricSpace(X, metric)
+    ix = LIMSIndex(sp, n_clusters=k_clusters, m=m, n_rings=n_rings,
+                   seed=seed)
+    q = X[rng.integers(n)] + rng.normal(0, 0.1, d)
+    truth, dists = brute_range(sp, q, r := float(np.quantile(dists_q :=
+                               dist_one_to_many(q, X, metric), sel)))
+    ids, ds, st_ = ix.range_query(q, r)
+    assert set(int(i) for i in ids) == truth
+    # returned distances are the true distances
+    for i, dd in zip(ids, ds):
+        assert abs(dd - dists_q[int(i)]) < 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(300, 1200),
+       d=st.integers(2, 8),
+       k=st.integers(1, 25),
+       seed=st.integers(0, 10_000))
+def test_knn_query_exact(n, d, k, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d))
+    sp = MetricSpace(X, "l2")
+    ix = LIMSIndex(sp, n_clusters=8, m=3, n_rings=10, seed=seed)
+    q = X[rng.integers(n)] + rng.normal(0, 0.05, d)
+    d_all = dist_one_to_many(q, X, "l2")
+    kth = np.sort(d_all)[k - 1]
+    ids, ds, _ = ix.knn_query(q, k)
+    assert len(ids) == k
+    assert abs(np.sort(ds)[-1] - kth) < 1e-9
+
+
+def test_point_query_and_edit_metric():
+    sig = signature(5, 80, seed=3)
+    sp = MetricSpace(sig, "edit")
+    ix = LIMSIndex(sp, n_clusters=5, m=2, n_rings=8)
+    # point query finds the exact string
+    ids, _ = ix.point_query(sig[17])
+    assert 17 in set(int(i) for i in ids)
+    # range query exact under edit distance
+    q = sig[42]
+    d = dist_one_to_many(q, sig, "edit")
+    r = 10.0
+    truth = set(np.where(d <= r)[0].tolist())
+    ids, ds, _ = ix.range_query(q, r)
+    assert set(int(i) for i in ids) == truth
+
+
+def test_insert_delete_retrain_exact():
+    rng = np.random.default_rng(0)
+    X = gauss_mix(2000, 6, seed=1)
+    sp = MetricSpace(X, "l2")
+    ix = LIMSIndex(sp, n_clusters=10, m=3, n_rings=10)
+    new_rows = X[rng.choice(2000, 50)] + rng.normal(0, 0.02, (50, 6))
+    gids = [ix.insert(r) for r in new_rows]
+    all_rows = np.concatenate([X, new_rows])
+    q = X[3] + 0.01
+    d = dist_one_to_many(q, all_rows, "l2")
+    r = float(np.quantile(d, 0.02))
+    truth = set(np.where(d <= r)[0].tolist())
+    ids, _, _ = ix.range_query(q, r)
+    assert set(int(i) for i in ids) == truth
+    # delete two objects; they must disappear
+    ix.delete(X[3])
+    ids, _, _ = ix.range_query(q, r)
+    assert 3 not in set(int(i) for i in ids)
+    truth.discard(3)
+    assert set(int(i) for i in ids) == truth
+    # retrain a cluster (folds buffer, drops tombstones) — still exact
+    for c in range(ix.K):
+        ix.retrain_cluster(c)
+    ids, _, _ = ix.range_query(q, r)
+    assert set(int(i) for i in ids) == truth
+
+
+# ------------------------------------------------------------ components
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 400), m=st.integers(1, 4),
+       n_rings=st.integers(1, 25), seed=st.integers(0, 9999))
+def test_mapping_invariants(n, m, n_rings, seed):
+    rng = np.random.default_rng(seed)
+    pd = np.abs(rng.normal(size=(n, m))) * rng.uniform(0.5, 5, size=m)
+    mp = build_mapping(pd, n_rings)
+    # ring ids in range; equal-count rings (±1 page granularity)
+    assert mp.rids.min() >= 0 and mp.rids.max() < n_rings
+    # lims values sorted ascending in storage order
+    assert (np.diff(mp.lims_sorted) >= 0).all()
+    # lexicographic consistency: lims order == tuple order (Def. 8)
+    vals = lims_value(mp.rids, n_rings)
+    tuples = [tuple(row) for row in mp.rids]
+    order_v = np.argsort(vals, kind="stable")
+    order_t = sorted(range(n), key=lambda i: (tuples[i], i))
+    assert list(order_v) == order_t
+    # equal distances ⇒ equal ring id (ties share ranks)
+    col = pd[:, 0]
+    for v in np.unique(col)[:5]:
+        sel = np.where(col == v)[0]
+        assert len(set(mp.rids[sel, 0].tolist())) == 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 2000), degree=st.integers(1, 20),
+       guess_off=st.integers(-500, 500), seed=st.integers(0, 9999))
+def test_expsearch_matches_searchsorted(n, degree, guess_off, seed):
+    rng = np.random.default_rng(seed)
+    arr = np.sort(rng.normal(size=n) ** 3)
+    xs = np.concatenate([rng.choice(arr, 3), rng.normal(size=3),
+                         [arr[0] - 1, arr[-1] + 1]])
+    lst = arr.tolist()
+    for x in xs:
+        for side in ("left", "right"):
+            want = int(np.searchsorted(arr, x, side=side))
+            guess = int(np.clip(want + guess_off, 0, n - 1))
+            got = exponential_search(lst, float(x), guess, side=side)
+            assert got == want
+            assert binary_search(lst, float(x), side=side) == want
+
+
+def test_rank_model_error_bounded():
+    rng = np.random.default_rng(0)
+    col = np.sort(rng.gamma(2.0, 1.0, size=5000))
+    model = PolyRankModel.fit(col, degree=8)
+    xs = rng.uniform(col[0], col[-1], 200)
+    errs = [abs(model.predict_scalar(float(x)) -
+                int(np.searchsorted(col, x))) for x in xs]
+    # learned guess lands near the truth: exponential search is O(log err)
+    assert np.median(errs) < 200
+    # fast scalar path == vectorized predict
+    for x in xs[:20]:
+        assert model.predict_scalar(float(x)) == int(model.predict(x))
+
+
+def test_kselect_runs_and_is_sane():
+    from repro.core.kselect import select_k
+    X = gauss_mix(4000, 4, n_components=8, seed=0)
+    sp = MetricSpace(X, "l2")
+    res = select_k(sp, [2, 4, 8, 16, 32], m=2)
+    assert res.best_k in (2, 4, 8, 16, 32)
+    assert (res.overhead >= 0).all()
+
+
+def test_pages_beat_scan_at_low_selectivity():
+    """The index's raison d'être: far fewer pages than a full scan."""
+    X = gauss_mix(40_000, 8, seed=2)
+    sp = MetricSpace(X, "l2")
+    ix = LIMSIndex(sp, n_clusters=50, m=3, n_rings=20)
+    from repro.baselines import LinearScan
+    scan = LinearScan(sp)
+    rng = np.random.default_rng(1)
+    tot_l = tot_s = 0
+    for qi in rng.choice(40_000, 5):
+        q = X[qi] + rng.normal(0, 0.003, 8)
+        d = dist_one_to_many(q, X, "l2")
+        r = float(np.quantile(d, 1e-4))
+        _, _, st_l = ix.range_query(q, r)
+        _, _, st_s = scan.range_query(q, r)
+        tot_l += st_l.pages
+        tot_s += st_s.pages
+    assert tot_l < tot_s / 5
+
+
+def test_batched_lims_matches_host():
+    """The vectorized ring-box mask engine (TPU path) returns exactly the
+    host index's results — the IntervalGen ≡ rid-box-mask equivalence."""
+    from repro.core.batched import BatchedLIMS
+    X = gauss_mix(8000, 8, seed=4)
+    sp = MetricSpace(X, "l2")
+    ix = LIMSIndex(sp, n_clusters=16, m=3, n_rings=20)
+    bx = BatchedLIMS(ix)
+    rng = np.random.default_rng(2)
+    for qi in rng.choice(8000, 5):
+        q = X[qi] + rng.normal(0, 0.004, 8)
+        d = dist_one_to_many(q, X, "l2")
+        r = float(np.quantile(d, 1e-3))
+        truth = set(np.where(d <= r)[0].tolist())
+        ids, _ = bx.range_query(q, r)
+        assert set(int(i) for i in ids) == truth
+        h_ids, _, _ = ix.range_query(q, r)
+        assert set(int(i) for i in ids) == set(int(i) for i in h_ids)
+        gid, dists = bx.knn_query(q, 9)
+        assert abs(dists[-1] - np.sort(d)[8]) < 1e-4

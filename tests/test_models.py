@@ -1,0 +1,190 @@
+"""Model zoo correctness: per-arch smoke tests (shapes, finiteness) and
+prefill+decode == full-forward consistency (the serving contract), plus
+attention / SSD algorithm equivalences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeCell
+from repro.configs.registry import ARCHS
+from repro.models import zoo
+from repro.models.layers import chunked_attention, dense_attention
+from repro.models.mamba2 import ssd_chunked
+from repro.models.params import count_params, init_params
+
+KEY = jax.random.PRNGKey(0)
+TRAIN = ShapeCell("t", 64, 2, "train")
+PREFILL = ShapeCell("p", 64, 2, "prefill")
+
+
+@pytest.fixture(scope="module")
+def built():
+    """fp32 reduced models: the consistency tests verify cache *mechanics*
+    exactly; bf16 numerics are covered by the smoke/loss tests."""
+    import dataclasses
+    out = {}
+    for name, cfg in ARCHS.items():
+        r = dataclasses.replace(cfg.reduced(), dtype="float32")
+        specs = zoo.model_specs(r)
+        params = init_params(specs, KEY, r.dtype)
+        if r.moe is not None:
+            # make routing decisive: at init router logits are ~0.02-scale,
+            # so bf16 noise between the full-seq and decode paths flips
+            # top-k choices (a test artifact, not a cache bug). Scaling the
+            # router separates the logits well past bf16 noise.
+            params = jax.tree_util.tree_map_with_path(
+                lambda path, x: x * 50.0
+                if any(getattr(k, "key", None) == "router" for k in path)
+                else x, params)
+        out[name] = (r, params, specs)
+    return out
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_train_step_finite(built, name):
+    r, params, specs = built[name]
+    batch = zoo.make_batch(r, TRAIN, 1)
+    loss, metrics = jax.jit(zoo.loss_fn(r))(params, batch)
+    assert jnp.isfinite(loss)
+    assert count_params(specs) > 0
+    # gradients flow and are finite
+    g = jax.grad(lambda p: zoo.loss_fn(r)(p, batch)[0])(params)
+    flat = jax.tree.leaves(g)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in flat)
+    assert any(float(jnp.abs(x).max()) > 0 for x in flat)
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_prefill_decode_matches_forward(built, name):
+    """Teacher-forced full forward at position t must equal prefill(≤t-1)
+    + decode(t) — exactness of every cache type (KV, ring, conv, SSD)."""
+    r, params, _ = built[name]
+    b, s = 2, 48
+    rng = np.random.default_rng(3)
+    tokens = jnp.asarray(rng.integers(0, r.vocab, (b, s)), jnp.int32)
+    batch = {"tokens": tokens,
+             "labels": jnp.asarray(rng.integers(0, r.vocab, (b, s)),
+                                   jnp.int32)}
+    pb = {"tokens": tokens[:, :-1]}
+    if r.family == "vlm":
+        pe = jnp.asarray(rng.normal(0, 0.02,
+                                    (b, r.n_prefix_embeds, r.d_model)),
+                         jnp.dtype(r.dtype))
+        batch["prefix_embeds"] = pe
+        pb["prefix_embeds"] = pe
+    if r.family == "encdec":
+        se = jnp.asarray(rng.normal(0, 0.02, (b, 32, r.d_model)),
+                         jnp.dtype(r.dtype))
+        batch["src_embeds"] = se
+        pb["src_embeds"] = se
+
+    # full teacher-forced logits
+    if r.family == "encdec":
+        from repro.models.encdec import decode_train, encode
+        mem = encode(params, batch["src_embeds"], r)
+        full = decode_train(params, mem, tokens, r)
+    else:
+        from repro.models.transformer import _unembed, forward_seq
+        x, _, _ = forward_seq(params, tokens, r,
+                              batch.get("prefix_embeds"))
+        if r.family == "vlm":
+            x = x[:, r.n_prefix_embeds:]
+        full = _unembed(params, x, r)
+
+    logits_p, cache = jax.jit(zoo.prefill_fn(r, s + 8))(params, pb)
+    np.testing.assert_allclose(
+        np.asarray(logits_p[:, 0], np.float32),
+        np.asarray(full[:, -2], np.float32), rtol=2e-3, atol=2e-3)
+
+    logits_d, cache = jax.jit(zoo.decode_fn(r))(params, tokens[:, -1], cache)
+    np.testing.assert_allclose(
+        np.asarray(logits_d[:, 0], np.float32),
+        np.asarray(full[:, -1], np.float32), rtol=5e-3, atol=5e-3)
+
+
+def test_chunked_attention_matches_dense():
+    rng = np.random.default_rng(0)
+    b, s, hq, hk, hd = 2, 256, 8, 2, 32
+    q = jnp.asarray(rng.normal(size=(b, s, hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, hk, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, hk, hd)), jnp.float32)
+    for window in (None, 64):
+        d = dense_attention(q, k, v, causal=True, window=window)
+        c = chunked_attention(q, k, v, causal=True, window=window,
+                              chunk_q=64, chunk_k=64)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(d),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunked_matches_recurrence():
+    """Chunked SSD == step-by-step linear recurrence."""
+    rng = np.random.default_rng(1)
+    b, s, h, p, n, g = 2, 64, 4, 8, 16, 1
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(b, s, h)), jnp.float32)
+    a_neg = -jnp.asarray(rng.uniform(0.5, 2.0, size=(h,)), jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(b, s, g, n)), jnp.float32)
+    cm = jnp.asarray(rng.normal(size=(b, s, g, n)), jnp.float32)
+
+    y_chunk, final = ssd_chunked(x, dt, a_neg, bm, cm, chunk=16)
+
+    # naive recurrence
+    state = np.zeros((b, h, p, n), np.float64)
+    ys = np.zeros((b, s, h, p), np.float64)
+    xn, dtn = np.asarray(x, np.float64), np.asarray(dt, np.float64)
+    bn = np.repeat(np.asarray(bm, np.float64), h // g, axis=2)
+    cn = np.repeat(np.asarray(cm, np.float64), h // g, axis=2)
+    an = np.asarray(a_neg, np.float64)
+    for t in range(s):
+        decay = np.exp(dtn[:, t] * an)[:, :, None, None]
+        xt = xn[:, t] * dtn[:, t][..., None]
+        state = state * decay + xt[..., None] * bn[:, t][:, :, None, :]
+        ys[:, t] = np.einsum("bhpn,bhn->bhp", state, cn[:, t])
+    np.testing.assert_allclose(np.asarray(y_chunk), ys, rtol=2e-3,
+                               atol=2e-3)
+    np.testing.assert_allclose(np.asarray(final), state, rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_swa_ring_buffer_decode(built):
+    """Sliding-window decode with ring cache == dense SWA attention,
+    past the wraparound point (s=60 > window=32)."""
+    cfg, params, _ = built["mixtral-8x7b"]
+    rng = np.random.default_rng(5)
+    b, s = 2, 60
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+    from repro.models.transformer import _unembed, forward_seq
+    x, _, _ = forward_seq(params, tokens, cfg)
+    full = _unembed(params, x, cfg)
+    logits_p, cache = jax.jit(zoo.prefill_fn(cfg, s + 8))(
+        params, {"tokens": tokens[:, :-1]})
+    logits_d, _ = jax.jit(zoo.decode_fn(cfg))(params, tokens[:, -1], cache)
+    np.testing.assert_allclose(np.asarray(logits_d[:, 0], np.float32),
+                               np.asarray(full[:, -1], np.float32),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_moe_capacity_drops():
+    """With capacity 1 and >1 token per expert, overflow tokens are
+    dropped (contribute nothing) and kept tokens are exact."""
+    import dataclasses
+    from repro.configs.base import MoEConfig
+    from repro.models.moe import moe_ffn, moe_specs
+    cfg = dataclasses.replace(
+        ARCHS["mixtral-8x7b"].reduced(), dtype="float32",
+        moe=MoEConfig(n_experts=2, top_k=1, d_expert=16,
+                      capacity_factor=0.01))
+    params = init_params(moe_specs(cfg), KEY, "float32")
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1, 4, cfg.d_model)), jnp.float32)
+    y, aux = moe_ffn(params, x, cfg)
+    # capacity = min(t,16)=4? no: cap = max(min(4,16), round(4*1/2*.01)) = 4
+    # force tiny capacity by many tokens:
+    x2 = jnp.asarray(rng.normal(size=(1, 64, cfg.d_model)), jnp.float32)
+    y2, _ = moe_ffn(params, x2, cfg)
+    # cap = max(16, round(64*0.5*0.01)) = 16 per expert; 64 tokens top-1 on
+    # 2 experts ⇒ ≥ 32 assignments on the busier expert ⇒ drops happen:
+    dropped_rows = int((np.abs(np.asarray(y2[0])).sum(-1) == 0).sum())
+    assert dropped_rows >= 64 - 2 * 16
+    assert np.isfinite(np.asarray(y2)).all()
