@@ -1,0 +1,105 @@
+"""Batch-engine throughput: the serving story (queries/sec).
+
+Compares, on the same snapshot and workload:
+  * ``BatchedLIMS.range_query_batch`` / ``knn_query_batch`` — one kernel
+    launch sequence for the whole batch;
+  * the per-query ``BatchedLIMS`` loop (same kernels, batch size 1) —
+    what the device path did before the batch engine;
+  * the host ``LIMSIndex`` per-query path;
+  * a brute-force linear scan.
+
+Emits ``name,us_per_call,derived`` rows where us_per_call is per *query*
+and derived records queries/sec plus the batch-vs-per-query speedup.
+The acceptance bar for the batch engine is ≥5× the per-query device loop
+at batch size 64 on CPU-interpret.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import LIMSIndex, MetricSpace
+from repro.core.batched import BatchedLIMS
+from repro.core.metrics import dist_one_to_many
+
+from .common import QUICK, emit
+
+BATCH = 64
+
+
+def _bench(fn, reps: int) -> float:
+    fn()                                    # warm-up (jit compile/trace)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def main() -> None:
+    from repro.data.datasets import gauss_mix
+
+    n = 6_000 if QUICK else 16_000
+    d = 8
+    X = gauss_mix(n, d, seed=0)
+    sp = MetricSpace(X, "l2")
+    ix = LIMSIndex(sp, n_clusters=16, m=3, n_rings=20)
+    bx = BatchedLIMS(ix)
+
+    rng = np.random.default_rng(1)
+    Q = X[rng.choice(n, BATCH)] + rng.normal(0, 0.003, (BATCH, d))
+    rs = np.array([float(np.quantile(dist_one_to_many(q, X, "l2"), 1e-3))
+                   for q in Q])
+    reps = 1 if QUICK else 3
+
+    # --- range ------------------------------------------------------------
+    t_batch = _bench(lambda: bx.range_query_batch(Q, rs), reps)
+    t_loop = _bench(
+        lambda: [bx.range_query(q, r) for q, r in zip(Q, rs)], reps)
+    t_host = _bench(
+        lambda: [ix.range_query(q, r) for q, r in zip(Q, rs)], reps)
+    t_scan = _bench(
+        lambda: [np.where(dist_one_to_many(q, X, "l2") <= r)[0]
+                 for q, r in zip(Q, rs)], reps)
+    speedup = t_loop / t_batch
+    emit("batch_range/batch64", t_batch / BATCH * 1e6,
+         f"qps={BATCH / t_batch:.0f} speedup_vs_per_query={speedup:.1f}x")
+    from repro.kernels.dispatch import default_interpret
+    emit("batch_range/per_query_device", t_loop / BATCH * 1e6,
+         f"qps={BATCH / t_loop:.0f}")
+    emit("batch_range/host_index", t_host / BATCH * 1e6,
+         f"qps={BATCH / t_host:.0f}")
+    emit("batch_range/linear_scan", t_scan / BATCH * 1e6,
+         f"qps={BATCH / t_scan:.0f}")
+    # the 5x bar is defined for CPU-interpret at full reps; a single
+    # quick-mode iteration (or a compiled backend where both paths are
+    # fast) is too noisy to gate on
+    if speedup < 5.0:
+        print(f"# WARNING: batch speedup {speedup:.1f}x below the 5x bar")
+        if default_interpret() and not QUICK:
+            raise AssertionError(
+                f"batch engine only {speedup:.1f}x over the per-query "
+                f"loop (acceptance bar: 5x at batch {BATCH})")
+
+    # --- kNN --------------------------------------------------------------
+    k = 10
+    t_batch = _bench(lambda: bx.knn_query_batch(Q, k), reps)
+    t_loop = _bench(lambda: [bx.knn_query(q, k) for q in Q], reps)
+    t_host = _bench(lambda: [ix.knn_query(q, k) for q in Q], reps)
+    t_scan = _bench(
+        lambda: [np.argsort(dist_one_to_many(q, X, "l2"))[:k] for q in Q],
+        reps)
+    emit("batch_knn/batch64", t_batch / BATCH * 1e6,
+         f"qps={BATCH / t_batch:.0f} "
+         f"speedup_vs_per_query={t_loop / t_batch:.1f}x")
+    emit("batch_knn/per_query_device", t_loop / BATCH * 1e6,
+         f"qps={BATCH / t_loop:.0f}")
+    emit("batch_knn/host_index", t_host / BATCH * 1e6,
+         f"qps={BATCH / t_host:.0f}")
+    emit("batch_knn/linear_scan", t_scan / BATCH * 1e6,
+         f"qps={BATCH / t_scan:.0f}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

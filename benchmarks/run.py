@@ -8,9 +8,11 @@ import traceback
 
 
 def main() -> None:
-    from . import bench_kernels, bench_knn, bench_misc, bench_range
+    from . import (bench_batch, bench_kernels, bench_knn, bench_misc,
+                   bench_range)
     sections = [
         ("kernels", bench_kernels.main),
+        ("batch engine (serving)", bench_batch.main),
         ("range (Fig 6/7)", bench_range.main),
         ("knn (Fig 9/10)", bench_knn.main),
         ("params/signature/build/updates/ablation (Fig 5/8/11-14)",

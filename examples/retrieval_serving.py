@@ -1,8 +1,11 @@
 """Retrieval serving: the paper's index as the framework's retrieval layer.
 
 An LM encodes queries into its embedding space; LIMS answers *exact* kNN
-over a corpus of embeddings — batched distances go through the same math
-as the Pallas `pdist` kernel (Gram trick). This is the deployment story in
+over a corpus of embeddings. Serving runs through the batched engine
+(``BatchedLIMS``): the whole query batch goes through the Pallas kernels
+(`pdist` → `rankeval` → `range_filter`) in one launch sequence — compiled
+on TPU/GPU, interpreted on CPU. The host index answers the same queries
+as a cross-check; both are exact. This is the deployment story in
 DESIGN.md §2: the index serves the models the framework trains.
 
     PYTHONPATH=src python examples/retrieval_serving.py
@@ -15,6 +18,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import LIMSIndex, MetricSpace
+from repro.core.batched import BatchedLIMS
 from repro.core.metrics import dist_one_to_many
 from repro.models import zoo
 from repro.models.params import init_params
@@ -67,8 +71,8 @@ def main() -> None:
     probe = sp.data[rng.choice(sp.n, 64)]
     nn_scale = np.median([np.partition(
         dist_one_to_many(p, sp.data, "l2"), 6)[6] for p in probe])
-    t0 = time.perf_counter()
     q_emb = np.asarray(encode(jnp.asarray(q_tokens)))
+    t0 = time.perf_counter()          # time the serving loop, not encoding
     pages = 0
     for i, q in enumerate(q_emb.astype(np.float64)):
         ids, ds, st = ix.knn_query(q, 5, delta_r=float(nn_scale) / 2)
@@ -84,6 +88,22 @@ def main() -> None:
           f"(corpus is {total_pages} pages — "
           f"{total_pages/(pages/16):.0f}x less I/O than a scan)")
     print("all 16 kNN results verified exact. OK")
+
+    # 4) the batched serving path: one snapshot, the whole query batch
+    # through the Pallas kernels in a single launch sequence
+    bx = BatchedLIMS(ix)
+    # warm-up with the serving batch shape (jit caches key on shapes)
+    bx.knn_query_batch(q_emb.astype(np.float64), 5)
+    t0 = time.perf_counter()
+    ids_b, ds_b = bx.knn_query_batch(q_emb.astype(np.float64), 5)
+    dt_b = time.perf_counter() - t0
+    for i, q in enumerate(q_emb.astype(np.float64)):
+        d_all = dist_one_to_many(q, sp.data, "l2")
+        assert abs(np.sort(ds_b[i])[-1] - np.sort(d_all)[4]) < 1e-9, \
+            "batched retrieval must be exact"
+    print(f"batched engine: 16 queries in {dt_b*1e3:.1f} ms "
+          f"({16/dt_b:.0f} q/s, {dt/dt_b:.1f}x vs per-query host serving); "
+          f"all 16 verified exact. OK")
 
 
 if __name__ == "__main__":

@@ -130,6 +130,11 @@ class LIMSIndex:
         for c in range(self.K):
             self.clusters.append(self._build_cluster(c))
         self.tombstones: set[int] = set()
+        # payloads of inserted objects (gid >= space.n): ``space.data``
+        # only covers build-time rows, so retrains must look rows that a
+        # previous retrain folded out of the buffer up here
+        self.inserted_rows: dict[int, np.ndarray] = {}
+        self._live = n
         self._next_id = n
         self.build_time_s = time.perf_counter() - t0
         # data-driven default kNN radius step: median ring width (§5.2)
@@ -345,10 +350,23 @@ class LIMSIndex:
         return ids[keep], st
 
     # --------------------------------------------------------------- kNN query
+    def live_count(self) -> int:
+        """Objects that a query can return: stored + buffered − tombstoned.
+        Maintained incrementally by insert/delete — O(1) on the query path."""
+        return self._live
+
     def knn_query(self, q: np.ndarray, k: int, delta_r: float | None = None):
-        """Alg. 2: growing-radius range queries, never re-reading pages."""
+        """Alg. 2: growing-radius range queries, never re-reading pages.
+
+        ``k`` is clamped to the number of live objects — asking for more
+        neighbours than the index holds returns them all (previously the
+        radius loop could never satisfy ``k`` and ran forever).
+        """
         st = QueryStats()
         t0 = time.perf_counter()
+        k = min(int(k), self.live_count())
+        if k <= 0:
+            return (np.empty(0, np.int64), np.empty(0), st)
         dr = float(delta_r) if delta_r is not None else self.default_delta_r
         visited: dict = {}
         heap_d = np.full(k, np.inf)
@@ -387,10 +405,13 @@ class LIMSIndex:
         c = int(np.argmin(d))
         ci = self.clusters[c]
         pos = int(np.searchsorted(ci.buf_d, d[c]))
+        row = np.array(p, copy=True)
         ci.buf_d = np.insert(ci.buf_d, pos, d[c])
-        ci.buf_rows.insert(pos, np.asarray(p))
+        ci.buf_rows.insert(pos, row)
         ci.buf_ids.insert(pos, self._next_id)
         gid = self._next_id
+        self.inserted_rows[gid] = row
+        self._live += 1
         self._next_id += 1
         return gid
 
@@ -413,6 +434,7 @@ class LIMSIndex:
                         ci.mapping.dist_min = pd.min(axis=0)
                         ci.mapping.dist_max = pd.max(axis=0)
                     break
+        self._live -= removed
         return removed
 
     def retrain_cluster(self, c: int) -> None:
@@ -420,10 +442,12 @@ class LIMSIndex:
         folding its insert buffer in and dropping tombstones."""
         ci = self.clusters[c]
         live = [int(g) for g in ci.store_ids if g not in self.tombstones]
-        rows = [self.space.data[g] if g < self.space.n else None for g in live]
-        # inserted rows live in the buffer, not in space.data
-        all_rows = [r for r in rows if r is not None]
-        all_ids = [g for g, r in zip(live, rows) if r is not None]
+        # build-time rows come from space.data; rows a previous retrain
+        # folded in (gid >= space.n) come from the inserted-payload map —
+        # without it they mapped to nothing and were silently dropped
+        all_rows = [self.space.data[g] if g < self.space.n
+                    else self.inserted_rows[g] for g in live]
+        all_ids = list(live)
         for gid, row in zip(ci.buf_ids, ci.buf_rows):
             if gid not in self.tombstones:
                 all_rows.append(row)
@@ -462,6 +486,9 @@ class LIMSIndex:
         ci.buf_rows, ci.buf_ids = [], []
         ci._d_lists = None
         ci._lims_list = None
+        # tombstoned inserts can never resurface: free their payloads
+        for g in set(self.inserted_rows) & self.tombstones:
+            del self.inserted_rows[g]
 
     # ------------------------------------------------------------------ helpers
     def _dist_rows(self, q, rows, st: QueryStats) -> np.ndarray:

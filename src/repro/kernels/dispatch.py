@@ -1,0 +1,36 @@
+"""Backend dispatch policy for the Pallas kernels.
+
+One place decides whether a ``pallas_call`` compiles or interprets:
+
+  * TPU / GPU backends → compiled (``interpret=False``);
+  * CPU (and anything else without a Pallas lowering) → ``interpret=True``;
+  * ``REPRO_PALLAS_INTERPRET=0|1`` overrides the auto-selection — useful
+    for debugging a miscompile on device (force interpret) or exercising
+    the compile path in CI emulators (force compile).
+
+Kernels take ``interpret: bool | None = None`` and resolve ``None``
+through :func:`resolve_interpret`; nothing else hard-codes the mode.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+_COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
+def default_interpret() -> bool:
+    """Auto policy: compile on TPU/GPU, interpret elsewhere (CPU)."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None and env not in ("", "auto"):
+        return env not in ("0", "false", "False")
+    return jax.default_backend() not in _COMPILED_BACKENDS
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` → backend auto-selection; a bool is respected as-is."""
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+__all__ = ["default_interpret", "resolve_interpret"]

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .dispatch import resolve_interpret
+
 _NEG = -1e30
 
 
@@ -71,13 +73,16 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
                                              "interpret", "kv_len"))
 def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                            causal: bool = True, bq: int = 128, bk: int = 128,
-                           interpret: bool = True,
+                           interpret: bool | None = None,
                            kv_len: int | None = None) -> jax.Array:
     """q: (B, Hq, Sq, D); k, v: (B, Hk, Sk, D); Hq % Hk == 0.
 
     Sq % bq == 0 and Sk % bk == 0 (ops.py pads); ``kv_len`` masks padded
     keys beyond the true kv length. Returns (B, Hq, Sq, D) in q's dtype.
+    ``interpret=None`` auto-selects by backend (compiled on TPU/GPU,
+    interpreted on CPU).
     """
+    interpret = resolve_interpret(interpret)
     b, hq, sq, d = q.shape
     _, hk, sk, _ = k.shape
     assert hq % hk == 0 and sq % bq == 0 and sk % bk == 0

@@ -1,8 +1,19 @@
 """Jitted public wrappers around the Pallas kernels.
 
-Handle padding to block multiples, platform dispatch (compiled on TPU,
-``interpret=True`` elsewhere) and result un-padding. These are the entry
-points the rest of the framework calls; nothing else touches pallas_call.
+Handle padding to block multiples, platform dispatch and result
+un-padding. These are the entry points the rest of the framework calls;
+nothing else touches pallas_call.
+
+Dispatch policy (``repro.kernels.dispatch``): ``pallas_call`` compiles on
+TPU/GPU and runs in interpret mode on CPU, overridable via
+``REPRO_PALLAS_INTERPRET=0|1``. The wrappers resolve the policy per call
+and pass an explicit bool down, so flipping the env var between calls
+takes effect (the kernels' jit caches key on the resolved static value).
+
+Tiling glue: block sizes shrink to fit small operands — a batch of 3
+queries pads to an 8-row tile, not a 128-row one — which keeps the
+interpret-mode batch engine cheap at small batch sizes while preserving
+the 8×128 f32 tile alignment the TPU path wants.
 """
 from __future__ import annotations
 
@@ -12,23 +23,56 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .dispatch import default_interpret
 from .flash_attention import flash_attention_pallas
 from .pdist import pdist_pallas
 from .range_filter import range_filter_pallas
 from .rankeval import rankeval_pallas
 
+_LANE = 128     # TPU lane width: last-dim tiles stay multiples of this
+_SUBLANE = 8    # f32 sublane width: leading-dim tiles align to this
+
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    return default_interpret()
 
 
-def _pad_rows(x: jax.Array, mult: int, fill: float = 0.0) -> jax.Array:
-    n = x.shape[0]
+def _tile(n: int, block: int, mult: int = _SUBLANE) -> int:
+    """Largest useful block: ``block`` capped at n rounded up to ``mult``."""
+    return min(block, -(-max(n, 1) // mult) * mult)
+
+
+def _lane_mult(interp: bool) -> int:
+    """Lane-dim tile granularity: interpret mode can shrink below the
+    128-lane TPU tile; the compiled path keeps full alignment."""
+    return _SUBLANE if interp else _LANE
+
+
+def _point_block(npts: int, bp: int, interp: bool) -> int:
+    """Point-dim tile. Interpret mode executes the kernel body once per
+    grid cell in Python, so its cost scales with the cell count, not the
+    tile size — grow the tile to cover many points per cell. The compiled
+    path keeps the VMEM-sized default."""
+    if interp:
+        bp = max(bp, 4096)
+    return _tile(npts, bp, _lane_mult(interp))
+
+
+def pad_to(x: jax.Array, mult: int, axis: int = 0,
+           fill: float = 0.0) -> jax.Array:
+    """Pad ``x`` along ``axis`` with ``fill`` to the next multiple of
+    ``mult`` (identity when already aligned)."""
+    n = x.shape[axis]
     pad = (-n) % mult
     if pad == 0:
         return x
-    return jnp.concatenate(
-        [x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)], axis=0)
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def _pad_rows(x: jax.Array, mult: int, fill: float = 0.0) -> jax.Array:
+    return pad_to(x, mult, axis=0, fill=fill)
 
 
 def pdist(q, p, metric: str = "sql2", bq: int = 128, bp: int = 128):
@@ -37,10 +81,13 @@ def pdist(q, p, metric: str = "sql2", bq: int = 128, bp: int = 128):
     q = jnp.asarray(q)
     p = jnp.asarray(p)
     nq, npts = q.shape[0], p.shape[0]
+    interp = _interpret()
+    bq = _tile(nq, bq)
+    bp = _point_block(npts, bp, interp)
     qp = _pad_rows(q, bq)
     pp = _pad_rows(p, bp)
     out = pdist_pallas(qp, pp, metric=metric, bq=bq, bp=bp,
-                       interpret=_interpret())
+                       interpret=interp)
     return out[:nq, :npts]
 
 
@@ -49,7 +96,9 @@ def rankeval(x, coef, lo, hi, n, n_rings: int = 20):
     x = jnp.asarray(x, jnp.float32)
     coef = jnp.asarray(coef, jnp.float32)
     g, b = x.shape
-    bg, bb = 8, 128
+    interp = _interpret()
+    bg = _tile(g, 64 if interp else 8)
+    bb = _point_block(b, 128, interp)
     gp, bp_ = (-g) % bg, (-b) % bb
     xq = jnp.pad(x, ((0, gp), (0, bp_)))
     coefq = jnp.pad(coef, ((0, gp), (0, 0)))
@@ -57,7 +106,7 @@ def rankeval(x, coef, lo, hi, n, n_rings: int = 20):
     hiq = jnp.pad(jnp.asarray(hi, jnp.float32), (0, gp), constant_values=1.0)
     nq_ = jnp.pad(jnp.asarray(n, jnp.float32), (0, gp))
     rank, rid = rankeval_pallas(xq, coefq, loq, hiq, nq_, n_rings=n_rings,
-                                bg=bg, bb=bb, interpret=_interpret())
+                                bg=bg, bb=bb, interpret=interp)
     return rank[:g, :b], rid[:g, :b]
 
 
@@ -67,11 +116,14 @@ def range_filter(q, p, r, bq: int = 128, bp: int = 128):
     p = jnp.asarray(p)
     r = jnp.asarray(r, jnp.float32)
     nq, npts = q.shape[0], p.shape[0]
+    interp = _interpret()
+    bq = _tile(nq, bq)
+    bp = _point_block(npts, bp, interp)
     qp = _pad_rows(q, bq)
     pp = _pad_rows(p, bp, fill=np.inf)     # padding rows never match
     rp = _pad_rows(r, bq, fill=-1.0)
     mask, cnt = range_filter_pallas(qp, pp, rp, bq=bq, bp=bp,
-                                    interpret=_interpret())
+                                    interpret=interp)
     return mask[:nq, :npts], cnt[:nq]
 
 
@@ -92,4 +144,4 @@ def flash_attention(q, k, v, causal: bool = True, bq: int = 128,
     return out[:, :, :sq]
 
 
-__all__ = ["pdist", "rankeval", "range_filter", "flash_attention"]
+__all__ = ["pdist", "rankeval", "range_filter", "flash_attention", "pad_to"]

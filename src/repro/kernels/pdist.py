@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .dispatch import resolve_interpret
+
 
 def _pdist_l2_kernel(q_ref, p_ref, o_ref):
     q = q_ref[...].astype(jnp.float32)
@@ -52,13 +54,15 @@ _KERNELS = {"sql2": _pdist_l2_kernel, "l1": _pdist_l1_kernel,
                    static_argnames=("metric", "bq", "bp", "interpret"))
 def pdist_pallas(q: jax.Array, p: jax.Array, metric: str = "sql2",
                  bq: int = 128, bp: int = 128,
-                 interpret: bool = True) -> jax.Array:
+                 interpret: bool | None = None) -> jax.Array:
     """Pairwise distances, rows of q (nq, d) × rows of p (np, d).
 
     ``metric='sql2'`` returns *squared* L2 (callers square radii instead of
     paying an elementwise sqrt over the nq×np tile). nq/np must be multiples
-    of bq/bp — ``repro.kernels.ops`` handles padding.
+    of bq/bp — ``repro.kernels.ops`` handles padding. ``interpret=None``
+    auto-selects by backend (compiled on TPU/GPU, interpreted on CPU).
     """
+    interpret = resolve_interpret(interpret)
     nq, d = q.shape
     npts, d2 = p.shape
     assert d == d2, (d, d2)

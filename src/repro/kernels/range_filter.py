@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .dispatch import resolve_interpret
+
 
 def _range_filter_kernel(q_ref, p_ref, r2_ref, mask_ref, cnt_ref):
     q = q_ref[...].astype(jnp.float32)
@@ -32,13 +34,15 @@ def _range_filter_kernel(q_ref, p_ref, r2_ref, mask_ref, cnt_ref):
 @functools.partial(jax.jit, static_argnames=("bq", "bp", "interpret"))
 def range_filter_pallas(q: jax.Array, p: jax.Array, r: jax.Array,
                         bq: int = 128, bp: int = 128,
-                        interpret: bool = True):
+                        interpret: bool | None = None):
     """(mask (nq, np) uint8, counts (nq, np/bp) int32) for L2 ball q≤r.
 
     ``r`` is one radius per query row (nq,) — batched heterogeneous range
     queries in one launch. Counts are per (query, point-tile): the host
-    uses them to skip empty tiles when gathering results.
+    uses them to skip empty tiles when gathering results. ``interpret=None``
+    auto-selects by backend (compiled on TPU/GPU, interpreted on CPU).
     """
+    interpret = resolve_interpret(interpret)
     nq, d = q.shape
     npts, _ = p.shape
     assert nq % bq == 0 and npts % bp == 0

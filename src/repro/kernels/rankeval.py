@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .dispatch import resolve_interpret
+
 
 def _rankeval_kernel(x_ref, coef_ref, lo_ref, hi_ref, n_ref, o_rank_ref,
                      o_rid_ref, *, n_coef: int, n_rings: int):
@@ -48,8 +50,10 @@ def _rankeval_kernel(x_ref, coef_ref, lo_ref, hi_ref, n_ref, o_rank_ref,
 def rankeval_pallas(x: jax.Array, coef: jax.Array, lo: jax.Array,
                     hi: jax.Array, n: jax.Array, n_rings: int = 20,
                     bg: int = 8, bb: int = 128,
-                    interpret: bool = True):
-    """Returns (rank, rid), both (G, B) int32."""
+                    interpret: bool | None = None):
+    """Returns (rank, rid), both (G, B) int32. ``interpret=None``
+    auto-selects by backend (compiled on TPU/GPU, interpreted on CPU)."""
+    interpret = resolve_interpret(interpret)
     g, b = x.shape
     g2, n_coef = coef.shape
     assert g == g2 and g % bg == 0 and b % bb == 0, (x.shape, coef.shape, bg, bb)

@@ -4,7 +4,8 @@ invariants (rings, LIMS-value order, rank models, search correction,
 updates, K-selection)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (LIMSIndex, MetricSpace, PolyRankModel, build_mapping,
                         exponential_search, lims_value)
@@ -103,6 +104,25 @@ def test_insert_delete_retrain_exact():
         ix.retrain_cluster(c)
     ids, _, _ = ix.range_query(q, r)
     assert set(int(i) for i in ids) == truth
+
+
+def test_repeated_retrain_keeps_inserted_rows():
+    """Regression: a row folded in by one retrain used to be silently
+    dropped by the next retrain (its gid >= space.n mapped to nothing)."""
+    X = gauss_mix(1200, 5, seed=7)
+    sp = MetricSpace(X, "l2")
+    ix = LIMSIndex(sp, n_clusters=5, m=2, n_rings=8)
+    p = X[10] + 0.3
+    gid = ix.insert(p)
+    cents = np.stack([ci.pivot_rows[0] for ci in ix.clusters])
+    c = int(np.argmin(dist_one_to_many(p, cents, "l2")))
+    ix.retrain_cluster(c)           # folds the buffer into the store
+    ix.retrain_cluster(c)           # must keep the folded row
+    ids, ds, _ = ix.range_query(p, 1e-9)
+    assert gid in set(int(i) for i in ids)
+    # and kNN clamps k to the live count instead of spinning forever
+    ids, _, _ = ix.knn_query(X[0], 10_000)
+    assert len(ids) == 1201
 
 
 # ------------------------------------------------------------ components
