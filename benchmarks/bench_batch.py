@@ -12,9 +12,21 @@ Emits ``name,us_per_call,derived`` rows where us_per_call is per *query*
 and derived records queries/sec plus the batch-vs-per-query speedup.
 The acceptance bar for the batch engine is ≥5× the per-query device loop
 at batch size 64 on CPU-interpret.
+
+``ServingEngine`` scaling: the second phase measures queries/sec through
+the full serving frontend at 1 vs N simulated host devices.  The device
+count is baked into the process at jax init, so each configuration runs
+in a subprocess with ``--xla_force_host_platform_device_count`` set
+(``--serving`` puts this module in worker mode: run the serving bench
+in-process, print one JSON record).  Results land in
+``BENCH_serving.json``.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -26,6 +38,7 @@ from repro.core.metrics import dist_one_to_many
 from .common import QUICK, emit
 
 BATCH = 64
+SERVING_DEVICES = (1, 4)     # simulated-host-device counts to compare
 
 
 def _bench(fn, reps: int) -> float:
@@ -100,6 +113,74 @@ def main() -> None:
          f"qps={BATCH / t_scan:.0f}")
 
 
+# ---------------------------------------------------------- serving scaling
+def serving_worker() -> dict:
+    """Measure ServingEngine throughput with this process's device count
+    (set by the parent via XLA_FLAGS). Returns one JSON-able record."""
+    import jax
+    from repro.data.datasets import gauss_mix
+    from repro.core.serving import ServingEngine
+
+    n = 4_000 if QUICK else 12_000
+    d = 8
+    X = gauss_mix(n, d, seed=0)
+    sp = MetricSpace(X, "l2")
+    ix = LIMSIndex(sp, n_clusters=16, m=3, n_rings=20)
+    se = ServingEngine(ix)       # auto-shards over the visible devices
+    rng = np.random.default_rng(1)
+    Q = X[rng.choice(n, BATCH)] + rng.normal(0, 0.003, (BATCH, d))
+    rs = np.array([float(np.quantile(dist_one_to_many(q, X, "l2"), 1e-3))
+                   for q in Q])
+    reps = 1 if QUICK else 3
+    t_range = _bench(lambda: se.range_query_batch(Q, rs), reps)
+    t_knn = _bench(lambda: se.knn_query_batch(Q, 10), reps)
+    ex = se.executor
+    return {
+        "devices": jax.device_count(),
+        "n_shards": getattr(ex, "n_shards", 1),
+        "executor": type(ex).__name__,
+        "n": n, "d": d, "batch": BATCH, "quick": QUICK,
+        "range_qps": round(BATCH / t_range, 1),
+        "knn_qps": round(BATCH / t_knn, 1),
+    }
+
+
+def bench_serving_scaling(device_counts=SERVING_DEVICES) -> None:
+    """Run the serving worker once per simulated device count and record
+    queries/sec in BENCH_serving.json (committed alongside the code)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    results = {}
+    for nd in device_counts:
+        env = dict(os.environ)
+        flags = [f for f in env.get("XLA_FLAGS", "").split()
+                 if "host_platform_device_count" not in f]
+        flags.append(f"--xla_force_host_platform_device_count={nd}")
+        env["XLA_FLAGS"] = " ".join(flags)
+        env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_batch", "--serving"],
+            cwd=root, env=env, capture_output=True, text=True, check=True)
+        rec = json.loads(out.stdout.strip().splitlines()[-1])
+        results[str(nd)] = rec
+        emit(f"serving/range_dev{nd}", 1e6 / rec["range_qps"],
+             f"qps={rec['range_qps']:.0f} shards={rec['n_shards']} "
+             f"({rec['executor']})")
+        emit(f"serving/knn_dev{nd}", 1e6 / rec["knn_qps"],
+             f"qps={rec['knn_qps']:.0f}")
+    with open(os.path.join(root, "BENCH_serving.json"), "w") as f:
+        json.dump({"bench": "ServingEngine queries/sec, 1 vs N simulated "
+                            "host devices (CPU-interpret kernels)",
+                   "batch": BATCH, "devices": results}, f, indent=2)
+        f.write("\n")
+
+
 if __name__ == "__main__":
-    print("name,us_per_call,derived")
-    main()
+    if "--serving" in sys.argv:
+        print(json.dumps(serving_worker()))
+    else:
+        print("name,us_per_call,derived")
+        main()
+        # only the full phase rewrites the committed BENCH_serving.json —
+        # a BENCH_QUICK sanity run must not clobber it with 1-rep numbers
+        if not QUICK:
+            bench_serving_scaling()

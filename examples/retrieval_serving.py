@@ -1,14 +1,20 @@
 """Retrieval serving: the paper's index as the framework's retrieval layer.
 
 An LM encodes queries into its embedding space; LIMS answers *exact* kNN
-over a corpus of embeddings. Serving runs through the batched engine
-(``BatchedLIMS``): the whole query batch goes through the Pallas kernels
-(`pdist` → `rankeval` → `range_filter`) in one launch sequence — compiled
-on TPU/GPU, interpreted on CPU. The host index answers the same queries
-as a cross-check; both are exact. This is the deployment story in
-DESIGN.md §2: the index serves the models the framework trains.
+over a corpus of embeddings. Serving runs through the layered stack
+(DESIGN.md §1): a ``BatchedLIMS`` snapshot executor first (the whole
+query batch through the Pallas kernels `pdist` → `rankeval` →
+`range_filter` in one launch sequence — compiled on TPU/GPU, interpreted
+on CPU), then the full ``ServingEngine`` frontend: online inserts with
+double-buffered snapshot refresh, auto-sharding across every visible
+device. The host index answers the same queries as a cross-check; both
+are exact. This is the deployment story in DESIGN.md §2: the index
+serves the models the framework trains.
 
     PYTHONPATH=src python examples/retrieval_serving.py
+    # exercise the cluster-sharded executor on fake host devices:
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/retrieval_serving.py
 """
 import time
 
@@ -17,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import LIMSIndex, MetricSpace
+from repro.core import LIMSIndex, MetricSpace, ServingEngine
 from repro.core.batched import BatchedLIMS
 from repro.core.metrics import dist_one_to_many
 from repro.models import zoo
@@ -104,6 +110,25 @@ def main() -> None:
     print(f"batched engine: 16 queries in {dt_b*1e3:.1f} ms "
           f"({16/dt_b:.0f} q/s, {dt/dt_b:.1f}x vs per-query host serving); "
           f"all 16 verified exact. OK")
+
+    # 5) the serving frontend: online updates + double-buffered snapshot
+    # refresh, auto-sharded across every visible device (DESIGN.md §4-5)
+    se = ServingEngine(ix, refresh_every=8)
+    ex = se.executor
+    print(f"ServingEngine: {type(ex).__name__} over "
+          f"{getattr(ex, 'n_shards', 1)} of {jax.device_count()} device(s)")
+    # new docs arrive while serving: 8 fresh variants of anchor 0
+    fresh_tokens = np.repeat(anchors[:1], 8, axis=0)
+    for i in range(8):
+        fresh_tokens[i, rng.integers(0, 32)] = rng.integers(0, cfg.vocab)
+    fresh = np.asarray(encode(jnp.asarray(fresh_tokens)), np.float64)
+    gids = [se.insert(row) for row in fresh]        # 8th insert → refresh
+    assert se.generation == 1, "refresh_every=8 must have fired"
+    ids_f, ds_f = se.knn_query_batch(fresh, 1)
+    assert [int(i) for i in ids_f[:, 0]] == gids, \
+        "each fresh doc must be its own exact 1-NN after the swap"
+    print(f"inserted {len(gids)} docs; snapshot generation "
+          f"{se.generation} swapped in, all {len(gids)} retrievable. OK")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,14 @@
-"""LIMS core: the paper's contribution (learned metric-space index)."""
+"""LIMS core: the paper's contribution (learned metric-space index).
+
+The device serving stack is layered (DESIGN.md §1): ``LIMSSnapshot``
+(immutable pytree) → ``QueryExecutor`` / ``ShardedExecutor`` (kernel
+pipeline, optionally cluster-sharded) → ``ServingEngine`` (mutable
+frontend with double-buffered refresh).  ``BatchedLIMS`` is the stable
+one-shot shim over the first two layers.
+"""
 from .batched import BatchedLIMS
 from .clustering import Clustering, kcenter, kmeans
+from .executor import QueryExecutor, ShardedExecutor, make_executor
 from .index import LIMSIndex, QueryStats
 from .kselect import KSelectResult, select_k
 from .mapping import PivotMapping, build_mapping, lims_value, ring_of_rank
@@ -9,10 +17,13 @@ from .paging import PageStore
 from .pivots import fft_pivots
 from .rankmodel import (PolyRankModel, SearchStats, binary_search,
                         exponential_search)
+from .serving import ServingEngine
+from .snapshot import LIMSSnapshot
 
 __all__ = [
     "BatchedLIMS", "Clustering", "kcenter", "kmeans", "LIMSIndex",
-    "QueryStats",
+    "QueryStats", "LIMSSnapshot", "QueryExecutor", "ShardedExecutor",
+    "make_executor", "ServingEngine",
     "KSelectResult", "select_k", "PivotMapping", "build_mapping",
     "lims_value", "ring_of_rank", "MetricSpace", "cdist",
     "dist_one_to_many", "PageStore", "fft_pivots", "PolyRankModel",

@@ -1,307 +1,60 @@
-"""Batched (accelerator-native) LIMS query engine — Pallas-kernel backed.
+"""Batched (accelerator-native) LIMS query engine — compatibility shim.
 
-The paper's IntervalGen exists to produce *contiguous disk ranges*; the
-union of its LIMS-value intervals is exactly the set of objects whose ring
-vector lies inside the per-pivot rid box (DESIGN.md §3). On an accelerator
-we skip the interval walk entirely and run the whole batch through three
-fused kernels (``repro.kernels``):
+The original ``BatchedLIMS`` fused snapshot construction, kernel
+orchestration and the public query API into one class; those now live in
+three layers (DESIGN.md §1):
 
-  1. ``pdist``        — query→pivot distances for every query at once
-                        (TriPrune + AreaLocate inputs, one MXU launch);
-  2. ``rankeval``     — every (cluster, pivot) rank model evaluated on the
-                        batch's annulus boundaries in ONE launch: x is laid
-                        out (G, 2B) with G = K·m groups and the lo/hi
-                        boundary values of all B queries as the columns;
-  3. ``range_filter`` — fused exact-distance refinement over the padded
-                        row store (only a uint8 mask leaves VMEM).
+  * ``repro.core.snapshot.LIMSSnapshot`` — the immutable device pytree
+    (padded cluster-major arrays + the certified rank-error bounds that
+    keep device results exact, DESIGN.md §3);
+  * ``repro.core.executor.QueryExecutor`` / ``ShardedExecutor`` — the
+    kernel pipeline (``pdist`` → ``rankeval`` → ``range_filter``) over a
+    snapshot, single-device or cluster-sharded via ``shard_map``;
+  * ``repro.core.serving.ServingEngine`` — the mutable frontend with
+    double-buffered snapshot refresh.
 
-Exactness with learned models on device: the host corrects model error
-with exponential search; fixed-shape device code cannot branch per value,
-so the snapshot instead *certifies* a per-(cluster, pivot) rank-error
-bound E and widens the predicted ring box by it.  E is computed at
-snapshot build by running the actual ``rankeval`` kernel over the group's
-own sorted column (max observed error at the data points) plus a Chebyshev
-derivative bound ``D = Σ k²|c_k|`` times the largest inter-point gap in
-normalized t-space (the polynomial cannot wiggle more than that between
-samples), plus slack for rint/f32.  The widened box is therefore a
-guaranteed superset of the host's exact rid box, and the final f64
-refinement removes every extra candidate — results are bit-identical to
-``LIMSIndex``.
-
-Data layout: per-cluster arrays padded to a common n_max —
-  rows (K, n_max, d) · rids (K, n_max, m) · pivots (K, m, d)
-  dist_min/max (K, m) · width (K,) · gids (K, n_max)
-Ring-ordered store rows come first in each cluster's slots; §5.3 insert-
-buffer rows follow with ``in_ring=False`` (they bypass the ring box, as
-the host always scans buffers); tombstoned and padding slots are invalid
-(-1 ids) and never match.
-
-Batch API: ``range_query_batch(Q, r)`` takes per-query radii and returns
-one (ids, dists) pair per query; ``knn_query_batch(Q, k)`` grows radii
-for the whole batch on device with per-query done flags (no per-query
-Python in the search loop — host work is limited to the ragged output
-assembly / f64 refinement after the loop converges).
-
-The kernels auto-select compile-vs-interpret by backend (compiled on
-TPU/GPU, interpreted on CPU) — see ``repro.kernels.dispatch``.
+``BatchedLIMS`` remains the stable one-shot API: build a snapshot from a
+host index and query it.  It *is* a ``QueryExecutor`` (same methods, same
+bit-exact results), so existing callers keep working unchanged; new code
+that wants sharding or online updates should use the layers directly.
 """
 from __future__ import annotations
 
-import numpy as np
-
-import jax
-import jax.numpy as jnp
-
-from ..kernels import ops
+from .executor import QueryExecutor
 from .index import LIMSIndex
-from .metrics import dist_one_to_many
-
-# f32 guard bands: rank math and distances run in f64 on the host; the
-# device path inflates radii so rounding can never exclude a true result
-# (the final f64 refinement removes the extras).
-_R_REL = 1e-5       # relative radius inflation for the ring box
-_R_ABS = 1e-4       # absolute radius inflation for the ring box
-_BALL_ABS = 1e-3    # absolute inflation for the distance-ball prefilter
-_E_SLACK = 2.0      # ranks: rint (±0.5 twice) + f32 eval slop
+from .snapshot import LIMSSnapshot
 
 
-class BatchedLIMS:
+class BatchedLIMS(QueryExecutor):
     """Immutable device snapshot of a LIMSIndex (vector metrics, L2)."""
 
     def __init__(self, index: LIMSIndex):
-        assert index.space.metric == "l2", "batched path: L2 (MXU kernel)"
-        self.m = index.m
-        self.n_rings = index.n_rings
-        self.K = K = index.K
-        m = self.m
-        d = index.space.data.shape[1]
-        dead = index.tombstones
+        super().__init__(LIMSSnapshot.build(index))
 
-        n_slots = [ci.n + len(ci.buf_ids) for ci in index.clusters]
-        n_max = max(max(n_slots), 1)
-        rows = np.zeros((K, n_max, d), np.float32)
-        rows64 = np.zeros((K, n_max, d), np.float64)
-        rids = np.full((K, n_max, m), -1, np.int32)
-        pivots = np.zeros((K, m, d), np.float32)
-        dmin = np.zeros((K, m), np.float32)
-        dmax = np.zeros((K, m), np.float32)
-        width = np.ones((K,), np.int32)
-        gids = np.full((K, n_max), -1, np.int64)
-        valid = np.zeros((K, n_max), bool)
-        in_ring = np.zeros((K, n_max), bool)
-        for ci in index.clusters:
-            k, n, nb = ci.cid, ci.n, len(ci.buf_ids)
-            pivots[k] = ci.pivot_rows
-            if n:
-                rows[k, :n] = ci.store.rows
-                rows64[k, :n] = ci.store.rows
-                rids[k, :n] = ci.mapping.rids[ci.mapping.order]
-                dmin[k] = ci.mapping.dist_min
-                dmax[k] = ci.mapping.dist_max
-                width[k] = max(1, -(-n // self.n_rings))
-                gids[k, :n] = ci.store_ids
-                in_ring[k, :n] = True
-                valid[k, :n] = ~np.isin(
-                    ci.store_ids, list(dead)) if dead else True
-            if nb:
-                buf = np.stack(ci.buf_rows)
-                rows[k, n:n + nb] = buf
-                rows64[k, n:n + nb] = buf
-                gids[k, n:n + nb] = ci.buf_ids
-                valid[k, n:n + nb] = [g not in dead for g in ci.buf_ids]
-        self.n_max = n_max
-        self.rows = jnp.asarray(rows.reshape(K * n_max, d))
-        self.rows_np = rows64.reshape(K * n_max, d)
-        self.rids = jnp.asarray(rids)
-        self.pivots = jnp.asarray(pivots.reshape(K * m, d))
-        self.dmin = jnp.asarray(dmin)
-        self.dmax = jnp.asarray(dmax)
-        self.width = jnp.asarray(width)
-        self.gids_np = gids.reshape(-1)
-        self.valid = jnp.asarray(valid)
-        self.valid_np = valid.reshape(-1)
-        self.in_ring = jnp.asarray(in_ring)
-        self.always = jnp.asarray(valid & ~in_ring)
-        self._ns = jnp.asarray(
-            np.array([ci.n for ci in index.clusters], np.int32))
-        self.live = int(valid.sum())
-        self._build_rank_table(index)
+    # legacy attribute surface (pre-split callers poked these directly)
+    @property
+    def K(self) -> int:
+        return self.snap.K
 
-    # ------------------------------------------------- rank-model snapshot
-    def _build_rank_table(self, index: LIMSIndex) -> None:
-        """(G, C) Chebyshev table for one-launch ``rankeval`` + the
-        certified per-group rank-error bound E (see module docstring)."""
-        K, m = self.K, self.m
-        G = K * m
-        models = [ci.rank_models[j] for ci in index.clusters
-                  for j in range(m)]
-        C = max(len(mo.coef) for mo in models)
-        coef = np.zeros((G, C), np.float32)
-        lo = np.zeros(G, np.float32)
-        hi = np.ones(G, np.float32)
-        n_model = np.zeros(G, np.float32)
-        for g, mo in enumerate(models):
-            coef[g, :len(mo.coef)] = mo.coef
-            lo[g], hi[g], n_model[g] = mo.lo, mo.hi, mo.n
-        self.coef = jnp.asarray(coef)
-        self.model_lo = jnp.asarray(lo)
-        self.model_hi = jnp.asarray(hi)
-        self.model_n = jnp.asarray(n_model)
+    @property
+    def m(self) -> int:
+        return self.snap.m
 
-        # certify E: kernel error at the data points + derivative bound
-        # for the gaps between them
-        n_col = max(int(ci.n) for ci in index.clusters)
-        err = np.zeros(G)
-        if n_col > 0:
-            xcols = np.zeros((G, n_col), np.float32)
-            for gi, (ci, j) in enumerate(
-                    (ci, j) for ci in index.clusters for j in range(m)):
-                n = ci.n
-                col = ci.mapping.d_sorted[j]
-                xcols[gi, :n] = col
-                if n:
-                    xcols[gi, n:] = col[-1]       # pad with hi (ignored)
-            pred = np.asarray(ops.rankeval(
-                xcols, coef, lo, hi, n_model, n_rings=self.n_rings)[0])
-            for gi, mo in enumerate(models):
-                n = mo.n
-                if n == 0:
-                    continue
-                err_pt = np.abs(pred[gi, :n] -
-                                np.arange(n, dtype=np.float64)).max()
-                deriv = float(np.sum(
-                    np.arange(len(mo.coef)) ** 2 * np.abs(mo.coef)))
-                span = mo.hi - mo.lo
-                col = index.clusters[gi // m].mapping.d_sorted[gi % m]
-                gap = float(np.diff(col).max()) * 2.0 / span \
-                    if (n > 1 and span > 0) else 0.0
-                # ranks live in [0, n-1] and predictions are clipped to
-                # the same interval, so n always bounds the error — keeps
-                # a degenerate fit from inflating E past "whole cluster"
-                err[gi] = min(err_pt + deriv * gap + _E_SLACK, float(n))
-        self.rank_err = jnp.asarray(err.reshape(K, m), jnp.float32)
+    @property
+    def n_rings(self) -> int:
+        return self.snap.n_rings
 
-    # ------------------------------------------------------ candidate mask
-    def _candidate_mask(self, qf: jax.Array, rf: jax.Array) -> jax.Array:
-        """(B, K·n_max) candidate mask for the batch — ring box from one
-        ``rankeval`` launch (error-widened), plus buffer/always slots."""
-        B = qf.shape[0]
-        K, m, N = self.K, self.m, self.n_rings
-        r_g = rf * (1.0 + _R_REL) + _R_ABS                      # (B,)
-        dq = jnp.sqrt(jnp.maximum(ops.pdist(qf, self.pivots), 0.0))
-        dqr = dq.reshape(B, K, m)
-        alive = jnp.all((dqr <= self.dmax[None] + r_g[:, None, None]) &
-                        (dqr >= self.dmin[None] - r_g[:, None, None]),
-                        axis=-1) & (self._ns[None] > 0)         # (B, K)
-        # one rankeval launch: G groups × (lo | hi) boundaries of all B
-        x = jnp.concatenate([(dq - r_g[:, None]).T,
-                             (dq + r_g[:, None]).T], axis=1)    # (G, 2B)
-        rank, _ = ops.rankeval(x, self.coef, self.model_lo, self.model_hi,
-                               self.model_n, n_rings=N)
-        err = self.rank_err.reshape(-1)[:, None]                # (G, 1)
-        lo_rank = jnp.maximum(rank[:, :B].astype(jnp.float32) - err, 0.0)
-        hi_rank = rank[:, B:].astype(jnp.float32) + err
-        w = self.width[None, :, None].astype(jnp.float32)
-        rid_lo = jnp.clip(jnp.floor(lo_rank.T.reshape(B, K, m) / w),
-                          0, N - 1).astype(jnp.int32)
-        rid_hi = jnp.clip(jnp.floor(hi_rank.T.reshape(B, K, m) / w),
-                          0, N - 1).astype(jnp.int32)
-        box = jnp.all((self.rids[None] >= rid_lo[:, :, None, :]) &
-                      (self.rids[None] <= rid_hi[:, :, None, :]),
-                      axis=-1)                                  # (B, K, n_max)
-        cand = (box & alive[:, :, None] & self.in_ring[None]) | \
-            self.always[None]
-        cand = cand & self.valid[None]
-        return cand.reshape(B, K * self.n_max)
+    @property
+    def n_max(self) -> int:
+        return self.snap.n_max
 
-    # -------------------------------------------------------- range queries
-    def range_query_batch(self, Q, r):
-        """Exact batched L2 range query.
+    @property
+    def gids_np(self):
+        return self.snap.gids_np
 
-        ``Q``: (B, d) queries; ``r``: scalar or (B,) per-query radii.
-        Returns a list of B ``(ids, dists)`` pairs (int64 / float64), the
-        same results as ``LIMSIndex.range_query`` per query.
-        """
-        Q = np.atleast_2d(np.asarray(Q, np.float64))
-        B = Q.shape[0]
-        r_arr = np.broadcast_to(np.asarray(r, np.float64), (B,))
-        qf = jnp.asarray(Q, jnp.float32)
-        rf = jnp.asarray(r_arr, jnp.float32)
-        cand = self._candidate_mask(qf, rf)
-        ball, _ = ops.range_filter(qf, self.rows,
-                                   rf * (1.0 + _R_REL) + _BALL_ABS)
-        hit = np.asarray(cand & ball.astype(bool))
-        out = []
-        for b in range(B):
-            idx = np.nonzero(hit[b])[0]
-            ids = self.gids_np[idx]
-            d_true = dist_one_to_many(Q[b], self.rows_np[idx], "l2")
-            keep = d_true <= r_arr[b]
-            out.append((ids[keep], d_true[keep]))
-        return out
+    @property
+    def rank_err(self):
+        return self.snap.rank_err
 
-    def range_query(self, q, r: float):
-        """Single-query convenience wrapper over the batch engine."""
-        return self.range_query_batch(np.asarray(q)[None], float(r))[0]
 
-    # ---------------------------------------------------------- kNN queries
-    def knn_query_batch(self, Q, k: int, max_rounds: int = 64):
-        """Exact batched kNN: one growing-radius loop for the whole batch.
-
-        Per-query done flags live on the host; every round runs the full
-        batch through the kernels (queries already done keep their frozen
-        radius — no per-query Python in the loop). ``k`` is clamped to the
-        number of live objects. Returns ``(ids (B, k'), dists (B, k'))``
-        with ``k' = min(k, live)``.
-        """
-        Q = np.atleast_2d(np.asarray(Q, np.float64))
-        B = Q.shape[0]
-        k_eff = min(int(k), self.live)
-        if k_eff <= 0:
-            return (np.empty((B, 0), np.int64), np.empty((B, 0)))
-        qf = jnp.asarray(Q, jnp.float32)
-        d2 = ops.pdist(qf, self.rows)                           # (B, P)
-        d2 = jnp.where(self.valid_np[None], d2, jnp.inf)
-        # seed radii at the f32 k-th distance: the loop usually certifies
-        # the ball in one round and only grows on guard-band misses
-        kth0 = jnp.sqrt(jnp.maximum(
-            -jax.lax.top_k(-d2, k_eff)[0][:, -1], 0.0))
-        r = np.asarray(kth0, np.float64) * (1.0 + 1e-3) + _BALL_ABS
-        done = np.zeros(B, bool)
-        final = np.zeros((B, d2.shape[1]), bool)
-        for _ in range(max_rounds):
-            rf = jnp.asarray(r, jnp.float32)
-            cand = self._candidate_mask(qf, rf)
-            ball = d2 <= ((rf * (1.0 + _R_REL) + _BALL_ABS) ** 2)[:, None]
-            candb = cand & ball
-            cnt = jnp.sum(candb, axis=1)
-            dm = jnp.where(candb, d2, jnp.inf)
-            kth = jnp.sqrt(jnp.maximum(
-                -jax.lax.top_k(-dm, k_eff)[0][:, -1], 0.0))
-            # certify: enough candidates AND the k-th ball fits inside the
-            # queried radius with margin for the f32 guard band
-            ok = np.asarray((cnt >= k_eff) &
-                            (kth <= rf * (1.0 - _R_REL) - _BALL_ABS))
-            newly = ok & ~done
-            if newly.any():
-                final[newly] = np.asarray(candb)[newly]
-                done |= newly
-            if done.all():
-                break
-            r = np.where(done, r, r * 2.0)
-        else:
-            final[~done] = self.valid_np[None]    # exact fallback: scan
-        ids_out = np.empty((B, k_eff), np.int64)
-        d_out = np.empty((B, k_eff))
-        for b in range(B):
-            idx = np.nonzero(final[b])[0]
-            d_true = dist_one_to_many(Q[b], self.rows_np[idx], "l2")
-            sel = np.argsort(d_true, kind="stable")[:k_eff]
-            ids_out[b] = self.gids_np[idx[sel]]
-            d_out[b] = d_true[sel]
-        return ids_out, d_out
-
-    def knn_query(self, q, k: int):
-        """Single-query convenience wrapper over the batch engine."""
-        ids, dists = self.knn_query_batch(np.asarray(q)[None], k)
-        return ids[0], dists[0]
+__all__ = ["BatchedLIMS"]

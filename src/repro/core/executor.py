@@ -1,0 +1,349 @@
+"""Layer 2 of the serving stack: kernel-pipeline execution over a snapshot.
+
+``QueryExecutor`` owns the device pipeline (``pdist`` → ``rankeval`` →
+``range_filter``) over one immutable ``LIMSSnapshot`` plus the host-side
+exact-search drivers (batched range, batch-wide growing-radius kNN).
+``ShardedExecutor`` runs the same pipeline cluster-sharded across devices
+with ``shard_map`` over a mesh from ``repro.sharding.logical``: each
+device holds a contiguous shard of clusters, TriPrune routes every query
+per shard (a device only evaluates its own clusters' ring boxes), and
+per-shard results come back through ``jax.lax`` collectives / sharded
+out-specs.  Cluster-granular sharding preserves exactness for free —
+pivot tables, rank models and the certified error bound are all strictly
+per-cluster state (DESIGN.md §4).
+
+With one visible device ``ShardedExecutor`` degrades to the plain
+single-device path, so CPU-interpret tests exercise the same class; a
+second CI job forces 4 host devices (``--xla_force_host_platform_device_count``)
+to run the real ``shard_map`` path.
+
+Exactness contract: both executors return results bit-identical to the
+host ``LIMSIndex`` — the device kernels only ever produce a certified
+*superset* of candidates (error-widened ring box, inflated f32 guard
+bands), and the final refinement recomputes true f64 distances on the
+host (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+from types import SimpleNamespace
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from ..kernels import ops
+from ..sharding.logical import default_rules, serving_mesh, spec_for
+from .metrics import dist_one_to_many
+from .snapshot import _DEVICE_FIELDS, LIMSSnapshot
+
+# f32 guard bands: rank math and distances run in f64 on the host; the
+# device path inflates radii so rounding can never exclude a true result
+# (the final f64 refinement removes the extras).
+_R_REL = 1e-5       # relative radius inflation for the ring box
+_R_ABS = 1e-4       # absolute radius inflation for the ring box
+_BALL_ABS = 1e-3    # absolute inflation for the distance-ball prefilter
+
+
+def _candidate_mask_arrays(qf, rf, snap: LIMSSnapshot, n_rings: int):
+    """(B, K·n_max) candidate mask — the pure device math, written against
+    a (possibly shard-local) snapshot pytree so the single-device executor
+    and every ``shard_map`` shard run literally the same code.
+
+    One ``pdist`` launch gives query→pivot distances (TriPrune +
+    AreaLocate inputs); one ``rankeval`` launch evaluates all K·m rank
+    models on the lo/hi annulus boundaries of the whole batch, laid out
+    (G, 2B); the predicted ring box is widened by the certified per-group
+    rank-error bound so it is a guaranteed superset of the host's box.
+    """
+    B = qf.shape[0]
+    K, n_max, m = snap.rids.shape
+    d = snap.rows.shape[-1]
+    N = n_rings
+    r_g = rf * (1.0 + _R_REL) + _R_ABS                      # (B,)
+    dq = jnp.sqrt(jnp.maximum(
+        ops.pdist(qf, snap.pivots.reshape(K * m, d)), 0.0))
+    dqr = dq.reshape(B, K, m)
+    # TriPrune, per query per (local) cluster
+    alive = jnp.all((dqr <= snap.dmax[None] + r_g[:, None, None]) &
+                    (dqr >= snap.dmin[None] - r_g[:, None, None]),
+                    axis=-1) & (snap.ns[None] > 0)          # (B, K)
+    # one rankeval launch: G groups × (lo | hi) boundaries of all B
+    x = jnp.concatenate([(dq - r_g[:, None]).T,
+                         (dq + r_g[:, None]).T], axis=1)    # (G, 2B)
+    rank, _ = ops.rankeval(
+        x, snap.coef.reshape(K * m, -1), snap.model_lo.reshape(-1),
+        snap.model_hi.reshape(-1), snap.model_n.reshape(-1), n_rings=N)
+    err = snap.rank_err.reshape(-1)[:, None]                # (G, 1)
+    lo_rank = jnp.maximum(rank[:, :B].astype(jnp.float32) - err, 0.0)
+    hi_rank = rank[:, B:].astype(jnp.float32) + err
+    w = snap.width[None, :, None].astype(jnp.float32)
+    rid_lo = jnp.clip(jnp.floor(lo_rank.T.reshape(B, K, m) / w),
+                      0, N - 1).astype(jnp.int32)
+    rid_hi = jnp.clip(jnp.floor(hi_rank.T.reshape(B, K, m) / w),
+                      0, N - 1).astype(jnp.int32)
+    box = jnp.all((snap.rids[None] >= rid_lo[:, :, None, :]) &
+                  (snap.rids[None] <= rid_hi[:, :, None, :]),
+                  axis=-1)                                  # (B, K, n_max)
+    cand = (box & alive[:, :, None] & snap.in_ring[None]) | \
+        snap.always[None]
+    cand = cand & snap.valid[None]
+    return cand.reshape(B, K * n_max)
+
+
+class QueryExecutor:
+    """Single-device kernel pipeline + exact host drivers over a snapshot."""
+
+    def __init__(self, snapshot: LIMSSnapshot):
+        self.snap = snapshot
+
+    @property
+    def live(self) -> int:
+        return self.snap.live
+
+    # ------------------------------------------------------ device stages
+    # (the three methods a sharding strategy overrides)
+    def _candidate_mask(self, qf: jax.Array, rf: jax.Array) -> jax.Array:
+        """(B, P) bool — error-widened ring box ∧ TriPrune ∧ validity."""
+        return _candidate_mask_arrays(qf, rf, self.snap, self.snap.n_rings)
+
+    def _hits(self, qf: jax.Array, rf: jax.Array) -> jax.Array:
+        """(B, P) bool — candidates ∧ fused L2-ball prefilter."""
+        s = self.snap
+        cand = self._candidate_mask(qf, rf)
+        ball, _ = ops.range_filter(qf, s.rows.reshape(s.n_slots, s.d),
+                                   rf * (1.0 + _R_REL) + _BALL_ABS)
+        return cand & ball.astype(bool)
+
+    def _sq_dists(self, qf: jax.Array) -> jax.Array:
+        """(B, P) f32 squared distances to every slot, inf where invalid."""
+        s = self.snap
+        d2 = ops.pdist(qf, s.rows.reshape(s.n_slots, s.d))
+        return jnp.where(s.valid.reshape(-1)[None], d2, jnp.inf)
+
+    # ------------------------------------------------------- range queries
+    def range_query_batch(self, Q, r):
+        """Exact batched L2 range query.
+
+        ``Q``: (B, d) queries; ``r``: scalar or (B,) per-query radii.
+        Returns a list of B ``(ids, dists)`` pairs (int64 / float64), the
+        same results as ``LIMSIndex.range_query`` per query.
+        """
+        s = self.snap
+        Q = np.atleast_2d(np.asarray(Q, np.float64))
+        B = Q.shape[0]
+        r_arr = np.broadcast_to(np.asarray(r, np.float64), (B,))
+        qf = jnp.asarray(Q, jnp.float32)
+        rf = jnp.asarray(r_arr, jnp.float32)
+        hit = np.asarray(self._hits(qf, rf))
+        out = []
+        for b in range(B):
+            idx = np.nonzero(hit[b])[0]
+            ids = s.gids_np[idx]
+            d_true = dist_one_to_many(Q[b], s.rows_np[idx], "l2")
+            keep = d_true <= r_arr[b]
+            out.append((ids[keep], d_true[keep]))
+        return out
+
+    def range_query(self, q, r: float):
+        """Single-query convenience wrapper over the batch engine."""
+        return self.range_query_batch(np.asarray(q)[None], float(r))[0]
+
+    # --------------------------------------------------------- kNN queries
+    def knn_query_batch(self, Q, k: int, max_rounds: int = 64):
+        """Exact batched kNN: one growing-radius loop for the whole batch.
+
+        Per-query done flags live on the host; every round runs the full
+        batch through the kernels (queries already done keep their frozen
+        radius — no per-query Python in the loop). ``k`` is clamped to the
+        number of live objects. Returns ``(ids (B, k'), dists (B, k'))``
+        with ``k' = min(k, live)``.
+        """
+        s = self.snap
+        Q = np.atleast_2d(np.asarray(Q, np.float64))
+        B = Q.shape[0]
+        k_eff = min(int(k), s.live)
+        if k_eff <= 0:
+            return (np.empty((B, 0), np.int64), np.empty((B, 0)))
+        qf = jnp.asarray(Q, jnp.float32)
+        d2 = self._sq_dists(qf)                             # (B, P)
+        # seed radii at the f32 k-th distance: the loop usually certifies
+        # the ball in one round and only grows on guard-band misses
+        kth0 = jnp.sqrt(jnp.maximum(
+            -jax.lax.top_k(-d2, k_eff)[0][:, -1], 0.0))
+        r = np.asarray(kth0, np.float64) * (1.0 + 1e-3) + _BALL_ABS
+        done = np.zeros(B, bool)
+        final = np.zeros((B, d2.shape[1]), bool)
+        for _ in range(max_rounds):
+            rf = jnp.asarray(r, jnp.float32)
+            cand = self._candidate_mask(qf, rf)
+            ball = d2 <= ((rf * (1.0 + _R_REL) + _BALL_ABS) ** 2)[:, None]
+            candb = cand & ball
+            cnt = jnp.sum(candb, axis=1)
+            dm = jnp.where(candb, d2, jnp.inf)
+            kth = jnp.sqrt(jnp.maximum(
+                -jax.lax.top_k(-dm, k_eff)[0][:, -1], 0.0))
+            # certify: enough candidates AND the k-th ball fits inside the
+            # queried radius with margin for the f32 guard band
+            ok = np.asarray((cnt >= k_eff) &
+                            (kth <= rf * (1.0 - _R_REL) - _BALL_ABS))
+            newly = ok & ~done
+            if newly.any():
+                final[newly] = np.asarray(candb)[newly]
+                done |= newly
+            if done.all():
+                break
+            r = np.where(done, r, r * 2.0)
+        else:
+            final[~done] = s.valid_np[None]       # exact fallback: scan
+        ids_out = np.empty((B, k_eff), np.int64)
+        d_out = np.empty((B, k_eff))
+        for b in range(B):
+            idx = np.nonzero(final[b])[0]
+            d_true = dist_one_to_many(Q[b], s.rows_np[idx], "l2")
+            sel = np.argsort(d_true, kind="stable")[:k_eff]
+            ids_out[b] = s.gids_np[idx[sel]]
+            d_out[b] = d_true[sel]
+        return ids_out, d_out
+
+    def knn_query(self, q, k: int):
+        """Single-query convenience wrapper over the batch engine."""
+        ids, dists = self.knn_query_batch(np.asarray(q)[None], k)
+        return ids[0], dists[0]
+
+
+class ShardedExecutor(QueryExecutor):
+    """Cluster-sharded executor: ``shard_map`` over a device mesh.
+
+    The snapshot's K clusters are padded to a multiple of the mesh's
+    ``data`` extent and split on the cluster axis; every device traces the
+    *same* ``_candidate_mask_arrays`` body over its shard-local snapshot.
+    Queries are replicated (in-spec ``P()``); per-shard hit masks come
+    back sharded on the candidate axis (out-spec ``P(None, 'data')`` —
+    the gather XLA inserts is an all-gather over the mesh), while the kNN
+    distance pass gathers explicitly with ``jax.lax.all_gather`` so the
+    seeding top-k sees the full corpus on every device.
+
+    With one device (plain tier-1 CI) no mesh is built and the class
+    behaves exactly like ``QueryExecutor``.
+    """
+
+    def __init__(self, snapshot: LIMSSnapshot, mesh: Mesh | None = None,
+                 axis: str = "data"):
+        if mesh is None:
+            mesh = serving_mesh()
+        self.mesh = mesh
+        self.axis = axis
+        self.n_shards = int(mesh.shape[axis]) if axis in mesh.axis_names \
+            else 1
+        if self.n_shards <= 1:
+            super().__init__(snapshot)
+            return
+        K_pad = -(-snapshot.K // self.n_shards) * self.n_shards
+        snapshot = snapshot.pad_clusters(K_pad)
+        # cluster-major arrays shard on axis 0 (logical axis "clusters");
+        # place each on its shard now so repeated calls never re-transfer
+        rules = default_rules()
+        leaves, treedef = jax.tree_util.tree_flatten(snapshot)
+        specs = tuple(
+            spec_for(("clusters",) + (None,) * (a.ndim - 1),
+                     rules, mesh, a.shape) for a in leaves)
+        snapshot = jax.tree_util.tree_unflatten(
+            treedef, [jax.device_put(a, NamedSharding(mesh, sp))
+                      for a, sp in zip(leaves, specs)])
+        super().__init__(snapshot)
+        self._dev_arrays = tuple(
+            getattr(snapshot, f) for f in _DEVICE_FIELDS)
+        self._cand_fn, self._hits_fn, self._sq_fn = _sharded_pipeline(
+            mesh, axis, snapshot.n_rings, specs)
+
+    # sharded device stages (same host drivers as the base class)
+    def _candidate_mask(self, qf, rf):
+        if self.n_shards <= 1:
+            return super()._candidate_mask(qf, rf)
+        return self._cand_fn(qf, rf, *self._dev_arrays)
+
+    def _hits(self, qf, rf):
+        if self.n_shards <= 1:
+            return super()._hits(qf, rf)
+        return self._hits_fn(qf, rf, *self._dev_arrays)
+
+    def _sq_dists(self, qf):
+        if self.n_shards <= 1:
+            return super()._sq_dists(qf)
+        return self._sq_fn(qf, *self._dev_arrays)
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_pipeline(mesh: Mesh, axis: str, n_rings: int, specs: tuple):
+    """Build the (cand, hits, sq) jitted ``shard_map`` pipeline.
+
+    Cached on (mesh, axis, n_rings, specs) — all hashable — so a
+    ``ServingEngine`` refresh that swaps in a same-shaped snapshot reuses
+    the previous generation's compiled pipeline instead of retracing on
+    the first post-swap batch (``jax.jit`` then keys on array shapes as
+    usual; only a snapshot whose padded shapes actually changed pays a
+    retrace).  The bodies take the snapshot's device arrays positionally
+    (flatten order = ``_DEVICE_FIELDS``) and rebuild an attribute view
+    per shard: inside ``shard_map`` every leading extent is shard-local,
+    and ``_candidate_mask_arrays`` derives all shapes from the arrays
+    themselves.
+    """
+    rep = P()                        # queries/radii: replicated per shard
+
+    def local(arrays) -> SimpleNamespace:
+        return SimpleNamespace(**dict(zip(_DEVICE_FIELDS, arrays)))
+
+    def cand_body(qf, rf, *arrays):
+        # shard-local TriPrune routing: this device evaluates only its
+        # own clusters' ring boxes for every query in the batch
+        return _candidate_mask_arrays(qf, rf, local(arrays), n_rings)
+
+    def hits_body(qf, rf, *arrays):
+        snap = local(arrays)
+        cand = _candidate_mask_arrays(qf, rf, snap, n_rings)
+        # the ops wrappers trace with shard-local shapes here, so their
+        # tile policy sizes blocks to the per-device slice automatically
+        ball, _ = ops.range_filter(
+            qf, snap.rows.reshape(-1, snap.rows.shape[-1]),
+            rf * (1.0 + _R_REL) + _BALL_ABS)
+        return cand & ball.astype(bool)
+
+    def sq_body(qf, *arrays):
+        snap = local(arrays)
+        d2 = ops.pdist(qf, snap.rows.reshape(-1, snap.rows.shape[-1]))
+        d2 = jnp.where(snap.valid.reshape(-1)[None], d2, jnp.inf)
+        # explicit collective: every shard ends up holding the full
+        # (B, P) distance matrix, in cluster-shard order, so the kNN
+        # radius seeding (global top-k) needs no host-side stitching
+        return jax.lax.all_gather(d2, axis, axis=1, tiled=True)
+
+    out_sharded = P(None, axis)
+    return (
+        jax.jit(shard_map(cand_body, mesh=mesh,
+                          in_specs=(rep, rep) + specs,
+                          out_specs=out_sharded, check_rep=False)),
+        jax.jit(shard_map(hits_body, mesh=mesh,
+                          in_specs=(rep, rep) + specs,
+                          out_specs=out_sharded, check_rep=False)),
+        jax.jit(shard_map(sq_body, mesh=mesh, in_specs=(rep,) + specs,
+                          out_specs=P(None, None), check_rep=False)),
+    )
+
+
+def make_executor(snapshot: LIMSSnapshot, *, sharded: bool | None = None,
+                  mesh: Mesh | None = None) -> QueryExecutor:
+    """Executor factory: ``sharded=None`` auto-shards when the process
+    sees more than one device (or a mesh is given), else stays on the
+    plain single-device pipeline."""
+    if sharded is None:
+        sharded = mesh is not None or jax.device_count() > 1
+    if sharded:
+        return ShardedExecutor(snapshot, mesh=mesh)
+    return QueryExecutor(snapshot)
+
+
+__all__ = ["QueryExecutor", "ShardedExecutor", "make_executor"]

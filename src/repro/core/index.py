@@ -59,6 +59,9 @@ class ClusterIndex:
     store: PageStore               # rows in ascending-LIMS order
     store_ids: np.ndarray          # (n_i,) global object id per stored row
     pivot_d_stored: np.ndarray     # (n_i, m) pivot distances, storage order
+    # (n_i,) False where the stored row is tombstoned — kept in sync by
+    # delete()/retrain_cluster() so nothing ever rescans the tombstone set
+    live_mask: np.ndarray = field(default_factory=lambda: np.ones(0, bool))
     # --- update state (§5.3) ---
     buf_d: np.ndarray = field(default_factory=lambda: np.empty(0))
     buf_rows: list = field(default_factory=list)
@@ -85,6 +88,7 @@ class ClusterIndex:
     def nbytes(self) -> int:
         b = self.mapping.d_sorted.nbytes + self.mapping.lims_sorted.nbytes
         b += self.pivot_d_stored.nbytes + self.store_ids.nbytes
+        b += self.live_mask.nbytes
         b += sum(m.nbytes() for m in self.rank_models) + self.pos_model.nbytes()
         b += self.mapping.dist_min.nbytes + self.mapping.dist_max.nbytes
         b += self.buf_d.nbytes + 8 * len(self.buf_ids)
@@ -170,6 +174,7 @@ class LIMSIndex:
             mapping=mapping, rank_models=rank_models, pos_model=pos_model,
             store=store, store_ids=np.asarray(mem[order], dtype=np.int64),
             pivot_d_stored=pivot_d[order],
+            live_mask=np.ones(len(mem), bool),
         )
 
     # ------------------------------------------------------------- rank locate
@@ -428,9 +433,11 @@ class LIMSIndex:
             for ci in self.clusters:
                 hit = np.where(ci.store_ids == gid)[0]
                 if len(hit):
-                    live = ~np.isin(ci.store_ids, list(self.tombstones))
-                    if live.any():
-                        pd = ci.pivot_d_stored[live]
+                    # incremental live mask: O(n) per delete, not
+                    # O(n·|tombstones|) via an isin rebuild
+                    ci.live_mask[hit] = False
+                    if ci.live_mask.any():
+                        pd = ci.pivot_d_stored[ci.live_mask]
                         ci.mapping.dist_min = pd.min(axis=0)
                         ci.mapping.dist_max = pd.max(axis=0)
                     break
@@ -482,6 +489,7 @@ class LIMSIndex:
                              page_bytes=self.page_bytes)
         ci.store_ids = np.asarray([all_ids[i] for i in order], dtype=np.int64)
         ci.pivot_d_stored = pivot_d[order]
+        ci.live_mask = np.ones(sub.n, bool)
         ci.buf_d = np.empty(0)
         ci.buf_rows, ci.buf_ids = [], []
         ci._d_lists = None

@@ -1,0 +1,175 @@
+"""Layer 3 of the serving stack: the mutable frontend.
+
+``ServingEngine`` is what a deployment talks to.  It owns
+
+  * the host ``LIMSIndex`` (source of truth for §5.3 updates),
+  * a double-buffered pair of snapshot executors: the *active* executor
+    serves queries; ``refresh()`` builds a fresh ``LIMSSnapshot`` into the
+    standby slot **off the hot path** and then swaps the two with a single
+    attribute assignment — atomic under the GIL, so an in-flight batch
+    that already grabbed the active executor keeps its consistent
+    snapshot while new batches see the new one.  No query ever blocks on
+    a rebuild and no query ever observes a half-built snapshot.
+
+Updates (``insert`` / ``delete`` / ``retrain_cluster``) go straight to
+the host index and bump a mutation counter; once the counter reaches
+``refresh_every`` the engine triggers a rebuild — synchronously by
+default (deterministic for tests), or on a background thread with
+``async_refresh=True`` (updates serialize with the rebuild via a lock;
+queries never take it).  Between refreshes queries serve the last
+snapshot — stale but *consistent and exact with respect to that
+snapshot*, the usual contract of a serving index (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import threading
+
+from jax.sharding import Mesh
+
+from .executor import QueryExecutor, make_executor
+from .index import LIMSIndex
+from .snapshot import LIMSSnapshot
+
+
+class ServingEngine:
+    """Double-buffered snapshot serving over a mutable ``LIMSIndex``."""
+
+    def __init__(self, index: LIMSIndex, *, refresh_every: int = 64,
+                 sharded: bool | None = None, mesh: Mesh | None = None,
+                 async_refresh: bool = False):
+        self._index = index
+        self._refresh_every = int(refresh_every)
+        self._sharded = sharded
+        self._mesh = mesh
+        self._async = bool(async_refresh)
+        # guards host-index mutation + snapshot builds (never queries)
+        self._update_lock = threading.Lock()
+        # guards background-refresh thread bookkeeping
+        self._thread_lock = threading.Lock()
+        self._refresh_thread: threading.Thread | None = None
+        self._refresh_again = False
+        self.generation = 0
+        self.pending_mutations = 0
+        self._active: QueryExecutor = self._build_executor()
+        self._standby: QueryExecutor | None = None
+
+    # ------------------------------------------------------------ plumbing
+    def _build_executor(self) -> QueryExecutor:
+        snap = LIMSSnapshot.build(self._index)
+        return make_executor(snap, sharded=self._sharded, mesh=self._mesh)
+
+    @property
+    def index(self) -> LIMSIndex:
+        return self._index
+
+    @property
+    def executor(self) -> QueryExecutor:
+        """The active executor; grab it once per batch for a consistent
+        view across the whole batch."""
+        return self._active
+
+    @property
+    def snapshot(self) -> LIMSSnapshot:
+        return self._active.snap
+
+    # ------------------------------------------------------------- queries
+    # Each query method reads ``self._active`` exactly once: the batch
+    # runs against that snapshot even if a refresh swaps mid-flight.
+    def range_query_batch(self, Q, r):
+        return self._active.range_query_batch(Q, r)
+
+    def range_query(self, q, r: float):
+        return self._active.range_query(q, r)
+
+    def knn_query_batch(self, Q, k: int, **kw):
+        return self._active.knn_query_batch(Q, k, **kw)
+
+    def knn_query(self, q, k: int):
+        return self._active.knn_query(q, k)
+
+    # ------------------------------------------------------------- updates
+    # The mutation counter is only ever read or written under
+    # _update_lock (refresh() subtracts under the same lock), so
+    # concurrent updaters and a background rebuild can't lose counts.
+    # The threshold check happens after the lock is released — refresh()
+    # re-takes it — so two racing updaters can at worst both trigger a
+    # refresh, which is harmless (the second sees zero pending).
+    def insert(self, p) -> int:
+        with self._update_lock:
+            gid = self._index.insert(p)
+            self.pending_mutations += 1
+            pending = self.pending_mutations
+        self._maybe_refresh(pending)
+        return gid
+
+    def delete(self, q) -> int:
+        with self._update_lock:
+            removed = self._index.delete(q)
+            self.pending_mutations += removed
+            pending = self.pending_mutations
+        if removed:
+            self._maybe_refresh(pending)
+        return removed
+
+    def retrain_cluster(self, c: int) -> None:
+        with self._update_lock:
+            self._index.retrain_cluster(c)
+            # a retrain rewrites cluster structure the snapshot mirrors;
+            # force the next refresh decision regardless of the
+            # insert/delete count
+            self.pending_mutations += self._refresh_every
+            pending = self.pending_mutations
+        self._maybe_refresh(pending)
+
+    def _maybe_refresh(self, pending: int) -> None:
+        if self._refresh_every and pending >= self._refresh_every:
+            if self._async:
+                self._spawn_refresh()
+            else:
+                self.refresh()
+
+    # ------------------------------------------------------------- refresh
+    def refresh(self) -> None:
+        """Rebuild the standby snapshot and swap it in atomically."""
+        with self._update_lock:
+            seen = self.pending_mutations
+            new = self._build_executor()
+            # the swap: one attribute store (GIL-atomic); the previous
+            # executor moves to standby, kept alive for in-flight batches
+            self._active, self._standby = new, self._active
+            self.pending_mutations -= seen
+            self.generation += 1
+
+    def _spawn_refresh(self) -> None:
+        with self._thread_lock:
+            if self._refresh_thread is not None:
+                # a rebuild is running: ask it to go again before exiting
+                # (its exit decision happens under this same lock, so the
+                # request can never fall into a teardown window)
+                self._refresh_again = True
+                return
+            t = threading.Thread(target=self._refresh_worker, daemon=True,
+                                 name="lims-snapshot-refresh")
+            self._refresh_thread = t
+        t.start()
+
+    def _refresh_worker(self) -> None:
+        while True:
+            self.refresh()
+            with self._thread_lock:
+                if not self._refresh_again:
+                    self._refresh_thread = None
+                    return
+                self._refresh_again = False
+
+    def wait_refresh(self) -> None:
+        """Block until every requested background refresh has landed."""
+        while True:
+            with self._thread_lock:
+                t = self._refresh_thread
+            if t is None:
+                return
+            t.join()
+
+
+__all__ = ["ServingEngine"]

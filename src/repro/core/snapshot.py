@@ -1,0 +1,285 @@
+"""Layer 1 of the serving stack: the immutable device snapshot.
+
+``LIMSSnapshot`` is a pure pytree of padded, cluster-major arrays built
+from a host ``LIMSIndex`` — no query logic lives here (that is layer 2,
+``repro.core.executor``; the mutable serving frontend is layer 3,
+``repro.core.serving``; see DESIGN.md §1 for the stack).
+
+Everything a query needs is laid out per cluster, padded to a common
+``n_max`` so the whole corpus is one rectangular block:
+
+  rows    (K, n_max, d)  f32   ring-ordered store rows, then §5.3 insert-
+                               buffer rows, then invalid padding slots
+  rids    (K, n_max, m)  i32   ring id per (row, pivot); -1 on non-ring slots
+  pivots  (K, m, d)      f32   pivot payloads
+  dmin/dmax (K, m)       f32   per-pivot distance extents (TriPrune)
+  width   (K,)           i32   ring width ceil(n/N)
+  ns      (K,)           i32   stored-row count per cluster
+  valid / in_ring / always (K, n_max) bool
+                               live slots / ring-structured slots / slots
+                               that bypass the ring box (insert buffers)
+  coef    (K, m, C)      f32   Chebyshev rank-model tables (one row per
+                               (cluster, pivot) group)
+  model_lo/hi/n (K, m)   f32   per-group domain + train count
+  rank_err (K, m)        f32   certified rank-error bound E (DESIGN.md §3)
+
+The cluster-major (K-leading) layout is what makes cluster-granular
+sharding free: a ``ShardedExecutor`` splits every device array on axis 0
+and each shard is a self-contained snapshot of K/ndev clusters (pivot
+tables stay valid under partition — pruning and rank models are purely
+per-cluster, so exactness survives sharding; DESIGN.md §4).
+
+Host-side refinement data (``gids_np``, ``rows_np`` in f64, ``valid_np``)
+rides along as aux so the final exact-distance refinement never round-trips
+through f32 device memory.
+
+Exactness with learned models on device: the host corrects model error
+with exponential search; fixed-shape device code cannot branch per value,
+so the snapshot instead *certifies* a per-(cluster, pivot) rank-error
+bound E and widens the predicted ring box by it.  E is computed at build
+by running the actual ``rankeval`` kernel over the group's own sorted
+column (max observed error at the data points) plus a Chebyshev
+derivative bound ``D = Σ k²|c_k|`` times the largest inter-point gap in
+normalized t-space (the polynomial cannot wiggle more than that between
+samples), plus slack for rint/f32.  The widened box is therefore a
+guaranteed superset of the host's exact rid box, and the final f64
+refinement removes every extra candidate — results are bit-identical to
+``LIMSIndex``.  The full argument is DESIGN.md §3.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, fields, replace
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .index import LIMSIndex
+
+_E_SLACK = 2.0      # ranks: rint (±0.5 twice) + f32 eval slop
+
+# device-array fields, in flatten order (pytree children)
+_DEVICE_FIELDS = (
+    "rows", "rids", "pivots", "dmin", "dmax", "width", "ns",
+    "valid", "in_ring", "always",
+    "coef", "model_lo", "model_hi", "model_n", "rank_err",
+)
+# static / host-side fields (pytree aux)
+_AUX_FIELDS = ("K", "m", "n_rings", "n_max", "live",
+               "gids_np", "rows_np", "valid_np")
+
+
+@dataclass(frozen=True)
+class LIMSSnapshot:
+    """Immutable snapshot of one ``LIMSIndex`` (vector metrics, L2)."""
+
+    # static metadata
+    K: int
+    m: int
+    n_rings: int
+    n_max: int
+    live: int
+    # device arrays (cluster-major; see module docstring for shapes)
+    rows: jax.Array
+    rids: jax.Array
+    pivots: jax.Array
+    dmin: jax.Array
+    dmax: jax.Array
+    width: jax.Array
+    ns: jax.Array
+    valid: jax.Array
+    in_ring: jax.Array
+    always: jax.Array
+    coef: jax.Array
+    model_lo: jax.Array
+    model_hi: jax.Array
+    model_n: jax.Array
+    rank_err: jax.Array
+    # host-side refinement data (f64 / int64, flat (K·n_max, …))
+    gids_np: np.ndarray
+    rows_np: np.ndarray
+    valid_np: np.ndarray
+
+    # ------------------------------------------------------------- pytree
+    def tree_flatten(self):
+        children = tuple(getattr(self, f) for f in _DEVICE_FIELDS)
+        aux = tuple(getattr(self, f) for f in _AUX_FIELDS)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(**dict(zip(_AUX_FIELDS, aux)),
+                   **dict(zip(_DEVICE_FIELDS, children)))
+
+    @property
+    def n_slots(self) -> int:
+        """Total padded slot count P = K · n_max (the candidate axis)."""
+        return self.K * self.n_max
+
+    @property
+    def d(self) -> int:
+        return self.rows.shape[-1]
+
+    # -------------------------------------------------------------- build
+    @classmethod
+    def build(cls, index: LIMSIndex) -> "LIMSSnapshot":
+        assert index.space.metric == "l2", "device path: L2 (MXU kernel)"
+        K, m = index.K, index.m
+        d = index.space.data.shape[1]
+        dead = index.tombstones
+
+        n_slots = [ci.n + len(ci.buf_ids) for ci in index.clusters]
+        n_max = max(max(n_slots), 1)
+        rows = np.zeros((K, n_max, d), np.float32)
+        rows64 = np.zeros((K, n_max, d), np.float64)
+        rids = np.full((K, n_max, m), -1, np.int32)
+        pivots = np.zeros((K, m, d), np.float32)
+        dmin = np.zeros((K, m), np.float32)
+        dmax = np.zeros((K, m), np.float32)
+        width = np.ones((K,), np.int32)
+        gids = np.full((K, n_max), -1, np.int64)
+        valid = np.zeros((K, n_max), bool)
+        in_ring = np.zeros((K, n_max), bool)
+        for ci in index.clusters:
+            k, n, nb = ci.cid, ci.n, len(ci.buf_ids)
+            pivots[k] = ci.pivot_rows
+            if n:
+                rows[k, :n] = ci.store.rows
+                rows64[k, :n] = ci.store.rows
+                rids[k, :n] = ci.mapping.rids[ci.mapping.order]
+                dmin[k] = ci.mapping.dist_min
+                dmax[k] = ci.mapping.dist_max
+                width[k] = max(1, -(-n // index.n_rings))
+                gids[k, :n] = ci.store_ids
+                in_ring[k, :n] = True
+                valid[k, :n] = ci.live_mask
+            if nb:
+                buf = np.stack(ci.buf_rows)
+                rows[k, n:n + nb] = buf
+                rows64[k, n:n + nb] = buf
+                gids[k, n:n + nb] = ci.buf_ids
+                valid[k, n:n + nb] = [g not in dead for g in ci.buf_ids]
+        coef, lo, hi, n_model, err = _certified_rank_table(index)
+        return cls(
+            K=K, m=m, n_rings=index.n_rings, n_max=n_max,
+            live=int(valid.sum()),
+            rows=jnp.asarray(rows),
+            rids=jnp.asarray(rids),
+            pivots=jnp.asarray(pivots),
+            dmin=jnp.asarray(dmin),
+            dmax=jnp.asarray(dmax),
+            width=jnp.asarray(width),
+            ns=jnp.asarray(
+                np.array([ci.n for ci in index.clusters], np.int32)),
+            valid=jnp.asarray(valid),
+            in_ring=jnp.asarray(in_ring),
+            always=jnp.asarray(valid & ~in_ring),
+            coef=jnp.asarray(coef.reshape(K, m, -1)),
+            model_lo=jnp.asarray(lo.reshape(K, m)),
+            model_hi=jnp.asarray(hi.reshape(K, m)),
+            model_n=jnp.asarray(n_model.reshape(K, m)),
+            rank_err=jnp.asarray(err.reshape(K, m), jnp.float32),
+            gids_np=gids.reshape(-1),
+            rows_np=rows64.reshape(K * n_max, d),
+            valid_np=valid.reshape(-1),
+        )
+
+    # ------------------------------------------------------- shard padding
+    def pad_clusters(self, K_new: int) -> "LIMSSnapshot":
+        """Pad with inert clusters so K divides a shard count.
+
+        Padding clusters have ``ns = 0`` (TriPrune never wakes them) and
+        all-False validity masks, so they contribute no candidates; the
+        host-side arrays get matching -1-id / dead slots so the flat
+        candidate axis stays aligned with the device mask.  Pure — returns
+        a new snapshot, ``self`` is untouched.
+        """
+        if K_new == self.K:
+            return self
+        assert K_new > self.K
+        pk = K_new - self.K
+
+        def dev(name, fill):
+            a = getattr(self, name)
+            widths = [(0, pk)] + [(0, 0)] * (a.ndim - 1)
+            return jnp.pad(a, widths, constant_values=fill)
+
+        nm = self.n_max
+        return replace(
+            self, K=K_new,
+            rows=dev("rows", 0.0), rids=dev("rids", -1),
+            pivots=dev("pivots", 0.0),
+            dmin=dev("dmin", 0.0), dmax=dev("dmax", 0.0),
+            # width 1 / model_hi 1 keep the (masked-out) padded groups'
+            # arithmetic finite — no /0 inside the kernels
+            width=dev("width", 1), ns=dev("ns", 0),
+            valid=dev("valid", False), in_ring=dev("in_ring", False),
+            always=dev("always", False),
+            coef=dev("coef", 0.0), model_lo=dev("model_lo", 0.0),
+            model_hi=dev("model_hi", 1.0), model_n=dev("model_n", 0.0),
+            rank_err=dev("rank_err", 0.0),
+            gids_np=np.concatenate(
+                [self.gids_np, np.full(pk * nm, -1, np.int64)]),
+            rows_np=np.concatenate(
+                [self.rows_np, np.zeros((pk * nm, self.d), np.float64)]),
+            valid_np=np.concatenate(
+                [self.valid_np, np.zeros(pk * nm, bool)]),
+        )
+
+
+jax.tree_util.register_pytree_node(
+    LIMSSnapshot, LIMSSnapshot.tree_flatten, LIMSSnapshot.tree_unflatten)
+
+
+def _certified_rank_table(index: LIMSIndex):
+    """(G, C) Chebyshev table for one-launch ``rankeval`` + the certified
+    per-group rank-error bound E (module docstring / DESIGN.md §3)."""
+    m = index.m
+    G = index.K * m
+    models = [ci.rank_models[j] for ci in index.clusters for j in range(m)]
+    C = max(len(mo.coef) for mo in models)
+    coef = np.zeros((G, C), np.float32)
+    lo = np.zeros(G, np.float32)
+    hi = np.ones(G, np.float32)
+    n_model = np.zeros(G, np.float32)
+    for g, mo in enumerate(models):
+        coef[g, :len(mo.coef)] = mo.coef
+        lo[g], hi[g], n_model[g] = mo.lo, mo.hi, mo.n
+
+    # certify E: kernel error at the data points + derivative bound for
+    # the gaps between them
+    n_col = max(int(ci.n) for ci in index.clusters)
+    err = np.zeros(G)
+    if n_col > 0:
+        xcols = np.zeros((G, n_col), np.float32)
+        for gi, (ci, j) in enumerate(
+                (ci, j) for ci in index.clusters for j in range(m)):
+            n = ci.n
+            col = ci.mapping.d_sorted[j]
+            xcols[gi, :n] = col
+            if n:
+                xcols[gi, n:] = col[-1]       # pad with hi (ignored)
+        pred = np.asarray(ops.rankeval(
+            xcols, coef, lo, hi, n_model, n_rings=index.n_rings)[0])
+        for gi, mo in enumerate(models):
+            n = mo.n
+            if n == 0:
+                continue
+            err_pt = np.abs(pred[gi, :n] -
+                            np.arange(n, dtype=np.float64)).max()
+            deriv = float(np.sum(
+                np.arange(len(mo.coef)) ** 2 * np.abs(mo.coef)))
+            span = mo.hi - mo.lo
+            col = index.clusters[gi // m].mapping.d_sorted[gi % m]
+            gap = float(np.diff(col).max()) * 2.0 / span \
+                if (n > 1 and span > 0) else 0.0
+            # ranks live in [0, n-1] and predictions are clipped to the
+            # same interval, so n always bounds the error — keeps a
+            # degenerate fit from inflating E past "whole cluster"
+            err[gi] = min(err_pt + deriv * gap + _E_SLACK, float(n))
+    return coef, lo, hi, n_model, err
+
+
+__all__ = ["LIMSSnapshot"]

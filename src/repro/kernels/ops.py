@@ -14,6 +14,14 @@ Tiling glue: block sizes shrink to fit small operands — a batch of 3
 queries pads to an 8-row tile, not a 128-row one — which keeps the
 interpret-mode batch engine cheap at small batch sizes while preserving
 the 8×128 f32 tile alignment the TPU path wants.
+
+Shard-local sizing: under ``shard_map`` (the cluster-sharded executor)
+each device traces these wrappers with *shard-local* shapes, so the
+automatic `_tile`/`_point_block` policy already sizes blocks to the
+per-device slice — a 64k-row corpus split 8 ways tiles like an 8k-row
+one.  Callers that pin blocks explicitly (autotuners, benchmarks) should
+derive them from the local operand sizes via :func:`local_blocks`
+instead of global corpus constants.
 """
 from __future__ import annotations
 
@@ -75,6 +83,22 @@ def _pad_rows(x: jax.Array, mult: int, fill: float = 0.0) -> jax.Array:
     return pad_to(x, mult, axis=0, fill=fill)
 
 
+def local_blocks(nq: int, npts: int, bq: int = 128,
+                 bp: int = 128) -> tuple[int, int]:
+    """Resolve the (bq, bp) tile pair for (possibly shard-local) operand
+    sizes under the current dispatch policy: query tiles align to the
+    sublane width, point tiles grow to amortize interpret-mode grid cells
+    and cap at the local point count (lane-aligned).
+
+    This is exactly what ``pdist``/``range_filter`` resolve internally
+    from the shapes they receive — callers inside ``shard_map`` get
+    shard-local sizing for free.  The helper exists for code that needs
+    the policy *outside* a kernel call: autotuners seeding a search, and
+    benchmarks reporting the tile a measurement ran with."""
+    interp = _interpret()
+    return _tile(nq, bq), _point_block(npts, bp, interp)
+
+
 def pdist(q, p, metric: str = "sql2", bq: int = 128, bp: int = 128):
     """Pairwise distances with automatic padding. metric: sql2 | l1 | linf.
     sql2 returns squared distances (use ``jnp.sqrt`` or square radii)."""
@@ -91,14 +115,21 @@ def pdist(q, p, metric: str = "sql2", bq: int = 128, bp: int = 128):
     return out[:nq, :npts]
 
 
-def rankeval(x, coef, lo, hi, n, n_rings: int = 20):
-    """Batched rank-model eval (G groups × B values) + ring ids."""
+def rankeval(x, coef, lo, hi, n, n_rings: int = 20,
+             bg: int | None = None, bb: int | None = None):
+    """Batched rank-model eval (G groups × B values) + ring ids.
+
+    ``bg``/``bb`` override the group/value tile sizes (``None`` → policy
+    default, which adapts to the — possibly shard-local — operand)."""
     x = jnp.asarray(x, jnp.float32)
     coef = jnp.asarray(coef, jnp.float32)
     g, b = x.shape
     interp = _interpret()
-    bg = _tile(g, 64 if interp else 8)
-    bb = _point_block(b, 128, interp)
+    bg = _tile(g, 64 if interp else 8) if bg is None else _tile(g, bg)
+    # an explicit bb is respected (not grown) but keeps the backend's
+    # lane granularity so an override can never break tile alignment
+    bb = _point_block(b, 128, interp) if bb is None \
+        else _tile(b, bb, _lane_mult(interp))
     gp, bp_ = (-g) % bg, (-b) % bb
     xq = jnp.pad(x, ((0, gp), (0, bp_)))
     coefq = jnp.pad(coef, ((0, gp), (0, 0)))
@@ -144,4 +175,5 @@ def flash_attention(q, k, v, causal: bool = True, bq: int = 128,
     return out[:, :, :sq]
 
 
-__all__ = ["pdist", "rankeval", "range_filter", "flash_attention", "pad_to"]
+__all__ = ["pdist", "rankeval", "range_filter", "flash_attention",
+           "pad_to", "local_blocks"]

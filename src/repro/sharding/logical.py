@@ -10,6 +10,7 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # logical axis vocabulary
@@ -26,6 +27,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 #   kv_seq     — KV-cache sequence            → "model" (flash-decode shards it)
 #   ssm_state  — SSD state dim                → None
 #   ssm_inner  — SSD inner (expand*d)         → "model"
+#   clusters   — LIMS snapshot cluster axis   → "data" (cluster-granular
+#                serving shards; pivot tables stay valid under partition)
 
 
 def default_rules(fsdp: bool = False, seq_shard: bool = False,
@@ -51,7 +54,21 @@ def default_rules(fsdp: bool = False, seq_shard: bool = False,
         "ssm_state": None,
         "ssm_inner": "model",
         "conv": None,
+        "clusters": "data",
     }
+
+
+def serving_mesh(n_shards: Optional[int] = None) -> Mesh:
+    """1-D ``("data",)`` mesh for cluster-sharded index serving.
+
+    Uses every host-visible device by default (1 CPU in plain tests; N
+    fake host devices under ``--xla_force_host_platform_device_count=N``;
+    real chips on TPU/GPU pods). A FUNCTION, not a constant — importing
+    must never touch jax device state (cf. ``repro.launch.mesh``).
+    """
+    devs = jax.devices()
+    n = len(devs) if n_shards is None else max(1, min(n_shards, len(devs)))
+    return Mesh(np.asarray(devs[:n]), ("data",))
 
 
 def spec_for(axes: tuple, rules: dict, mesh: Mesh,

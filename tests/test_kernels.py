@@ -61,6 +61,21 @@ def test_rankeval_matches_ref(g, b, c):
     assert int(jnp.abs(rid - rid2).max()) <= 1
 
 
+def test_rankeval_block_overrides_match_defaults():
+    """Explicit bg/bb tile overrides (the autotune hook) change only the
+    launch grid, never the values."""
+    g, b, c = 13, 200, 9
+    coef = _rand((g, c), jnp.float32, 3) * 10
+    x = jax.random.uniform(KEY, (g, b), minval=0.0, maxval=2.0)
+    lo = jnp.zeros(g)
+    hi = jnp.full(g, 2.0)
+    n = jnp.full(g, 500.0)
+    rk, rid = ops.rankeval(x, coef, lo, hi, n, n_rings=20)
+    rk2, rid2 = ops.rankeval(x, coef, lo, hi, n, n_rings=20, bg=8, bb=64)
+    assert np.array_equal(np.asarray(rk), np.asarray(rk2))
+    assert np.array_equal(np.asarray(rid), np.asarray(rid2))
+
+
 def test_rankeval_matches_host_model():
     """Kernel model inference == the host PolyRankModel used by LIMS."""
     from repro.core.rankmodel import PolyRankModel
