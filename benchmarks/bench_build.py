@@ -1,0 +1,127 @@
+"""Build/retrain throughput: host numpy loop vs the device builder.
+
+Builds the same LIMS index twice per corpus size — once through the
+sequential host path (``LIMSIndex.__init__``/``_build_cluster``) and
+once through ``repro.build`` (``backend="device"``: batched clustering
+sweeps, device FFT pivots, ``pdist``-kernel distance columns, one
+batched least-squares launch for every rank/position model) — then
+times §5.3 partial reconstruction (``retrain_cluster``) through both
+backends on a dirtied cluster.
+
+Emits ``name,us_per_call,derived`` rows (us per build/retrain) and, on
+full runs, records everything in ``BENCH_build.json`` at
+n ∈ {4k, 32k} so build/retrain throughput is tracked across PRs.  On
+CPU the kernels run in interpret mode, so the absolute device numbers
+only validate plumbing — the ``interpret`` flag rides along in the
+record so compiled-backend runs are distinguishable.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import LIMSIndex, MetricSpace
+from repro.core.metrics import dist_one_to_many
+from repro.kernels.dispatch import default_interpret
+
+from .common import QUICK, emit
+
+SIZES = (2_000, 6_000) if QUICK else (4_000, 32_000)
+N_RETRAIN_INSERTS = 64
+D = 8
+DEGREE = 20          # the paper's rank-model degree — stresses the fits
+
+
+def _params(n: int) -> dict:
+    return dict(n_clusters=32 if n <= 8_000 else 64, m=3, n_rings=20,
+                degree=DEGREE)
+
+
+def _dirty_and_retrain(ix: LIMSIndex, X, backend: str, rng) -> float:
+    rows = X[rng.choice(len(X), N_RETRAIN_INSERTS)] \
+        + rng.normal(0, 0.01, (N_RETRAIN_INSERTS, X.shape[1]))
+    for r in rows:
+        ix.insert(r)
+    c = int(np.argmax([len(ci.buf_ids) for ci in ix.clusters]))
+    t0 = time.perf_counter()
+    ix.retrain_cluster(c, backend=backend)
+    return time.perf_counter() - t0
+
+
+def bench_one(n: int) -> dict:
+    from repro.data.datasets import gauss_mix
+
+    X = gauss_mix(n, D, seed=0)
+    p = _params(n)
+
+    t0 = time.perf_counter()
+    ih = LIMSIndex(MetricSpace(X, "l2"), **p)
+    t_host = time.perf_counter() - t0
+
+    # cold device build pays jit tracing/compilation; the warm rebuild
+    # (same shapes → cached executables) is what a serving refresh loop
+    # sees — report both
+    t0 = time.perf_counter()
+    iv = LIMSIndex(MetricSpace(X, "l2"), backend="device", **p)
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    iv = LIMSIndex(MetricSpace(X, "l2"), backend="device", **p)
+    t_dev = time.perf_counter() - t0
+    stages = {k: round(v, 4) for k, v in iv.device_build_timings.items()}
+
+    # sanity: both builds answer a probe query identically (exactness)
+    rng = np.random.default_rng(1)
+    q = X[rng.integers(n)] + rng.normal(0, 0.003, D)
+    r = float(np.quantile(dist_one_to_many(q, X, "l2"), 1e-3))
+    ids_h, _, _ = ih.range_query(q, r)
+    ids_d, _, _ = iv.range_query(q, r)
+    assert np.array_equal(ids_h, ids_d), "host/device builds disagree"
+
+    # retrain a dirtied cluster through both backends (device retrain
+    # runs on the host-built index too — backends are per-call); the
+    # first device retrain is the compile-paying cold call
+    t_rh = _dirty_and_retrain(ih, X, "host", rng)
+    t_rd_cold = _dirty_and_retrain(ih, X, "device", rng)
+    t_rd = _dirty_and_retrain(ih, X, "device", rng)
+
+    emit(f"build/host_n{n}", t_host * 1e6, f"s={t_host:.2f}")
+    emit(f"build/device_n{n}", t_dev * 1e6,
+         f"s={t_dev:.2f} (cold={t_cold:.2f}) "
+         f"speedup={t_host / t_dev:.2f}x stages={stages}")
+    emit(f"retrain/host_n{n}", t_rh * 1e6, f"ms={t_rh*1e3:.1f}")
+    emit(f"retrain/device_n{n}", t_rd * 1e6,
+         f"ms={t_rd*1e3:.1f} (cold={t_rd_cold*1e3:.0f}) "
+         f"speedup={t_rh / t_rd:.2f}x")
+    return {
+        "n": n, "d": D, **p, "interpret": default_interpret(),
+        "build_host_s": round(t_host, 3),
+        "build_device_s": round(t_dev, 3),
+        "build_device_cold_s": round(t_cold, 3),
+        "build_device_stages_s": stages,
+        "build_speedup": round(t_host / t_dev, 3),
+        "retrain_host_ms": round(t_rh * 1e3, 2),
+        "retrain_device_ms": round(t_rd * 1e3, 2),
+        "retrain_device_cold_ms": round(t_rd_cold * 1e3, 2),
+        "retrain_speedup": round(t_rh / t_rd, 3),
+    }
+
+
+def main() -> None:
+    results = {str(n): bench_one(n) for n in SIZES}
+    # only full runs rewrite the committed trajectory (quick numbers are
+    # 1-shot noise, same policy as BENCH_serving.json)
+    if not QUICK:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        with open(os.path.join(root, "BENCH_build.json"), "w") as f:
+            json.dump({"bench": "LIMS build + retrain wall time, host numpy "
+                                "loop vs device builder (repro.build)",
+                       "sizes": results}, f, indent=2)
+            f.write("\n")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

@@ -69,5 +69,21 @@ def run_knn(index, qs, k: int):
     return {"pages": pages / n, "ms": t / n * 1e3}
 
 
+# every emit() row also lands here so the driver (run.py) can persist a
+# section's results to BENCH_<section>.json — the perf trajectory is
+# tracked across PRs instead of only printed
+RESULTS: list = []
+
+
+def reset_results() -> None:
+    RESULTS.clear()
+
+
+def snapshot_results() -> list:
+    return list(RESULTS)
+
+
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    RESULTS.append({"name": name, "us_per_call": round(float(us_per_call), 1),
+                    "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")

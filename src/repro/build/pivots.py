@@ -1,0 +1,112 @@
+"""Device FFT pivot selection + pivot-distance columns for the builder.
+
+``fft_sweeps`` runs the per-cluster farthest-first traversal for ALL
+clusters at once over the padded cluster-major layout: each of the m-1
+rounds is one masked argmax per cluster plus one batched
+point-to-pivot distance pass — the device analogue of the host's
+``repro.core.pivots.fft_pivots`` loop, including its degenerate-cluster
+semantics (a re-picked pivot latches the cluster and the remaining
+pivot slots repeat the last distinct pivot).
+
+``pivot_columns`` computes the full (K, m, n_max) pivot-distance matrix
+through the existing ``pdist`` Pallas kernel: pivots of a cluster chunk
+form the query rows, the chunk's member rows the point rows, and the
+block-diagonal of the resulting (cc·m, cc·n_max) launch is gathered per
+cluster.  These f32 columns feed the rank-model fits only — the exact
+f64 columns exactness depends on are recomputed on the host
+(DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+
+
+def _rows_to_pivot(rows: jax.Array, prow: jax.Array, metric: str) -> jax.Array:
+    """(K, n_max) distances from every (padded) member row to its own
+    cluster's pivot row — direct formulation, vectorized over clusters."""
+    if metric == "l2":
+        diff = rows - prow[:, None, :]
+        return jnp.sqrt(jnp.sum(diff * diff, axis=-1))
+    if metric == "l1":
+        return jnp.sum(jnp.abs(rows - prow[:, None, :]), axis=-1)
+    if metric == "linf":
+        return jnp.max(jnp.abs(rows - prow[:, None, :]), axis=-1)
+    if metric == "cosine":
+        xn = rows / jnp.maximum(
+            jnp.linalg.norm(rows, axis=-1, keepdims=True), 1e-12)
+        rn = prow / jnp.maximum(
+            jnp.linalg.norm(prow, axis=-1, keepdims=True), 1e-12)
+        return 1.0 - jnp.einsum("knd,kd->kn", xn, rn)
+    raise ValueError(f"device pivots: unsupported metric {metric!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("m", "metric"))
+def fft_sweeps(rows: jax.Array, mask: jax.Array, gids: jax.Array,
+               d1: jax.Array, cent_rows: jax.Array, cent_gids: jax.Array,
+               m: int, metric: str) -> jax.Array:
+    """(K, m) global pivot ids for every cluster, pivot #1 = centroid.
+
+    Mirrors the host loop: ``d_near`` starts at the centroid distances
+    (the exact host values — parity of the first argmax is free), each
+    round argmaxes within the cluster and min-updates, and a round that
+    re-picks an existing pivot (all surviving ``d_near`` zero: duplicate
+    points) latches the cluster into repeating its last pivot, exactly
+    the host's ``break``-then-pad semantics.
+    """
+    K, n_max, _ = rows.shape
+    neg = jnp.asarray(-jnp.inf, d1.dtype)
+    d_near = jnp.where(mask, d1, neg)
+    piv_gids = cent_gids[:, None].astype(gids.dtype)         # (K, 1..m)
+    piv_row = cent_rows
+    latched = ~mask.any(axis=1)                              # empty clusters
+    for _ in range(1, m):
+        best = jnp.argmax(d_near, axis=1)
+        nxt_gid = jnp.take_along_axis(gids, best[:, None], axis=1)[:, 0]
+        dup = jnp.any(nxt_gid[:, None] == piv_gids, axis=1)
+        latched = latched | dup
+        cand = jnp.take_along_axis(rows, best[:, None, None], axis=1)[:, 0]
+        piv_row = jnp.where(latched[:, None], piv_row, cand)
+        new_gid = jnp.where(latched, piv_gids[:, -1], nxt_gid)
+        piv_gids = jnp.concatenate([piv_gids, new_gid[:, None]], axis=1)
+        dj = _rows_to_pivot(rows, piv_row, metric)
+        d_near = jnp.minimum(d_near, jnp.where(mask, dj, neg))
+    return piv_gids
+
+
+def pivot_columns(rows: jax.Array, pivot_rows: jax.Array, metric: str,
+                  chunk: int = 16) -> jax.Array:
+    """(K, m, n_max) f32 member→pivot distances through the ``pdist``
+    Pallas kernel, chunked over clusters.
+
+    One launch covers a chunk of ``cc`` clusters: queries are the
+    chunk's cc·m pivots, points its cc·n_max member slots; the needed
+    per-cluster block diagonal of the (cc·m, cc·n_max) result is then
+    gathered, so the kernel waste factor is ``cc``, not K.  Cosine has
+    no Pallas kernel — it falls back to the jitted ``cdist`` math.
+    """
+    K, n_max, d = rows.shape
+    m = pivot_rows.shape[1]
+    outs = []
+    for c0 in range(0, K, chunk):
+        c1 = min(c0 + chunk, K)
+        cc = c1 - c0
+        q = pivot_rows[c0:c1].reshape(cc * m, d)
+        p = rows[c0:c1].reshape(cc * n_max, d)
+        if metric == "l2":
+            dist = jnp.sqrt(jnp.maximum(ops.pdist(q, p, metric="sql2"), 0.0))
+        elif metric in ("l1", "linf"):
+            dist = ops.pdist(q, p, metric=metric)
+        else:                                   # cosine: no pallas kernel
+            from ..core.metrics import cdist
+            dist = cdist(q, p, metric)
+        blocks = dist.reshape(cc, m, cc, n_max)
+        outs.append(blocks[jnp.arange(cc), :, jnp.arange(cc), :])
+    return jnp.concatenate(outs, axis=0)
+
+
+__all__ = ["fft_sweeps", "pivot_columns"]

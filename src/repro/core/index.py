@@ -98,13 +98,16 @@ class ClusterIndex:
 class LIMSIndex:
     """Exact metric similarity index (paper: LIMS). ``learned=False`` gives
     the N-LIMS ablation: identical structure/pages, binary search instead of
-    model + exponential search."""
+    model + exponential search.  ``backend="device"`` builds through the
+    batched device pipeline in ``repro.build`` (DESIGN.md §6) — same
+    structures, same exact results, heavy stages on the accelerator."""
 
     def __init__(self, space: MetricSpace, n_clusters: int | None = None,
                  m: int = 3, n_rings: int = 20, degree: int = 8,
                  pos_degree: int = 8, page_bytes: int = DEFAULT_PAGE_BYTES,
                  seed: int = 0, clusterer: str = "kcenter",
-                 learned: bool = True, max_intervals: int = 4096):
+                 learned: bool = True, max_intervals: int = 4096,
+                 backend: str = "host"):
         t0 = time.perf_counter()
         self.space = space
         self.m = m
@@ -114,6 +117,7 @@ class LIMSIndex:
         self.page_bytes = page_bytes
         self.learned = learned
         self.max_intervals = max_intervals
+        self.backend = backend
         n = space.n
 
         if n_clusters is None:
@@ -122,8 +126,24 @@ class LIMSIndex:
             n_clusters = select_k(space, grid, m=m, seed=seed).best_k
         self.K = min(n_clusters, n)
 
-        if clusterer == "kcenter":
-            self.clustering: Clustering = kcenter(space, self.K, seed=seed)
+        # ``backend="device"`` runs clustering, pivot selection and every
+        # model fit on device (repro.build); the host structures below are
+        # then materialized from its output with all exactness-bearing
+        # quantities (columns, extents, ring boundaries) recomputed in f64
+        # (DESIGN.md §6).
+        prebuilt = None
+        if backend == "device":
+            from ..build.builder import device_build
+            prebuilt = device_build(
+                space, self.K, m=m, n_rings=n_rings, degree=degree,
+                pos_degree=pos_degree, seed=seed, clusterer=clusterer,
+                learned=learned)
+            self.clustering: Clustering = prebuilt.clustering
+            self.device_build_timings = dict(prebuilt.timings)
+        elif backend != "host":
+            raise ValueError(f"unknown build backend {backend!r}")
+        elif clusterer == "kcenter":
+            self.clustering = kcenter(space, self.K, seed=seed)
         elif clusterer == "kmeans":
             self.clustering = kmeans(space, self.K, seed=seed)
         else:
@@ -132,7 +152,7 @@ class LIMSIndex:
 
         self.clusters: list[ClusterIndex] = []
         for c in range(self.K):
-            self.clusters.append(self._build_cluster(c))
+            self.clusters.append(self._build_cluster(c, prebuilt=prebuilt))
         self.tombstones: set[int] = set()
         # payloads of inserted objects (gid >= space.n): ``space.data``
         # only covers build-time rows, so retrains must look rows that a
@@ -147,12 +167,20 @@ class LIMSIndex:
         self.default_delta_r = 2.0 * float(np.median(widths)) if widths else 1.0
 
     # ------------------------------------------------------------------ build
-    def _build_cluster(self, c: int) -> ClusterIndex:
+    def _build_cluster(self, c: int, prebuilt=None) -> ClusterIndex:
+        """Build one cluster's host structures.  ``prebuilt`` (a
+        ``repro.build.DeviceBuildResult``) supplies device-chosen pivots
+        and device-fit models; the pivot-distance columns, mapping and
+        extents are recomputed here in exact f64 either way — that is
+        what keeps the device build path exact (DESIGN.md §6)."""
         space, m = self.space, self.m
         mem = self.clustering.members[c]
-        centroid = int(self.clustering.center_idx[c])
         d1 = self.clustering.dist_to_center[mem]
-        piv = fft_pivots(space, mem, centroid, m, d1)
+        if prebuilt is None:
+            centroid = int(self.clustering.center_idx[c])
+            piv = fft_pivots(space, mem, centroid, m, d1)
+        else:
+            piv = prebuilt.pivot_gids[c]
         pivot_d = np.empty((len(mem), m), dtype=np.float64)
         pivot_d[:, 0] = d1
         for j in range(1, m):
@@ -161,10 +189,15 @@ class LIMSIndex:
             else:
                 pivot_d[:, j] = space.dist(space.data[piv[j]], mem)
         mapping = build_mapping(pivot_d, self.n_rings)
-        deg = self.degree if self.learned else 1
-        rank_models = [PolyRankModel.fit(mapping.d_sorted[j], deg) for j in range(m)]
-        pos_model = PolyRankModel.fit(mapping.lims_sorted.astype(np.float64),
-                                      self.pos_degree)
+        if prebuilt is None:
+            deg = self.degree if self.learned else 1
+            rank_models = [PolyRankModel.fit(mapping.d_sorted[j], deg)
+                           for j in range(m)]
+            pos_model = PolyRankModel.fit(
+                mapping.lims_sorted.astype(np.float64), self.pos_degree)
+        else:
+            rank_models = prebuilt.rank_models[c]
+            pos_model = prebuilt.pos_models[c]
         order = mapping.order
         rows = space.data[mem[order]]
         store = PageStore(rows, record_bytes=space.record_nbytes(),
@@ -444,9 +477,19 @@ class LIMSIndex:
         self._live -= removed
         return removed
 
-    def retrain_cluster(self, c: int) -> None:
+    def retrain_cluster(self, c: int, backend: str | None = None) -> None:
         """Partial reconstruction (§5.3): rebuild one cluster's index,
-        folding its insert buffer in and dropping tombstones."""
+        folding its insert buffer in and dropping tombstones.
+
+        ``backend="device"`` routes pivot selection and model fitting
+        through the device builder (``repro.build.retrain_device``); the
+        pivot-distance matrix, mapping and extents are recomputed in
+        exact f64 either way, so results stay exact (DESIGN.md §6).
+        ``None`` uses the backend the index was built with.
+        """
+        backend = self.backend if backend is None else backend
+        if backend not in ("host", "device"):
+            raise ValueError(f"unknown build backend {backend!r}")
         ci = self.clusters[c]
         live = [int(g) for g in ci.store_ids if g not in self.tombstones]
         # build-time rows come from space.data; rows a previous retrain
@@ -463,25 +506,32 @@ class LIMSIndex:
             return
         sub = MetricSpace(np.stack(all_rows), self.space.metric,
                           self.space._custom)
-        # single-cluster LIMS over the member set, centroid = pivot row 0
-        mem = np.arange(sub.n)
-        d1 = sub.dist(ci.pivot_rows[0], mem)
-        piv_rows = [ci.pivot_rows[0]]
-        pivot_d = np.empty((sub.n, self.m))
-        pivot_d[:, 0] = d1
-        d_near = d1.copy()
-        for j in range(1, self.m):
-            nxt = int(np.argmax(d_near))
-            piv_rows.append(sub.data[nxt])
-            dj = sub.dist(sub.data[nxt], mem)
-            pivot_d[:, j] = dj
-            d_near = np.minimum(d_near, dj)
-        mapping = build_mapping(pivot_d, self.n_rings)
         deg = self.degree if self.learned else 1
-        ci.rank_models = [PolyRankModel.fit(mapping.d_sorted[j], deg)
-                          for j in range(self.m)]
-        ci.pos_model = PolyRankModel.fit(mapping.lims_sorted.astype(np.float64),
-                                         self.pos_degree)
+        if backend == "device":
+            from ..build.builder import retrain_device
+            piv_rows, pivot_d, ci.rank_models, ci.pos_model = retrain_device(
+                sub, ci.pivot_rows[0], self.m, self.n_rings, deg,
+                self.pos_degree)
+            mapping = build_mapping(pivot_d, self.n_rings)
+        else:
+            # single-cluster LIMS over the member set, centroid = pivot 0
+            mem = np.arange(sub.n)
+            d1 = sub.dist(ci.pivot_rows[0], mem)
+            piv_rows = [ci.pivot_rows[0]]
+            pivot_d = np.empty((sub.n, self.m))
+            pivot_d[:, 0] = d1
+            d_near = d1.copy()
+            for j in range(1, self.m):
+                nxt = int(np.argmax(d_near))
+                piv_rows.append(sub.data[nxt])
+                dj = sub.dist(sub.data[nxt], mem)
+                pivot_d[:, j] = dj
+                d_near = np.minimum(d_near, dj)
+            mapping = build_mapping(pivot_d, self.n_rings)
+            ci.rank_models = [PolyRankModel.fit(mapping.d_sorted[j], deg)
+                              for j in range(self.m)]
+            ci.pos_model = PolyRankModel.fit(
+                mapping.lims_sorted.astype(np.float64), self.pos_degree)
         order = mapping.order
         ci.mapping = mapping
         ci.pivot_rows = np.stack(piv_rows)

@@ -37,17 +37,30 @@ class PolyRankModel:
         if n == 0:
             return PolyRankModel(np.zeros(1), 0.0, 1.0, 0)
         lo, hi = float(x[0]), float(x[-1])
-        if hi <= lo:                       # all-equal degenerate column
+        # constant model for single-element and all-equal columns: a
+        # high-degree fit on <2 distinct abscissae is ill-conditioned
+        # noise, and rank(anything) is 0 here anyway
+        if hi <= lo:
             return PolyRankModel(np.zeros(1), lo, lo + 1.0, n)
         # rank with ties-low semantics: first occurrence index
         ranks = np.searchsorted(x, x, side="left").astype(np.float64)
-        # keep the system comfortably over-determined
-        deg = int(min(degree, max(1, n // 8), 64))
+        # keep the system comfortably over-determined, and never ask for
+        # more degrees of freedom than there are distinct values (ties
+        # collapse rows: a near-constant column would otherwise feed an
+        # ill-conditioned high-degree Vandermonde to lstsq)
+        n_distinct = 1 + int(np.count_nonzero(np.diff(x) > 0))
+        deg = int(min(degree, max(1, n // 8), max(1, n_distinct - 1), 64))
         t = (x - lo) / (hi - lo) * 2.0 - 1.0
         with warnings.catch_warnings():
             warnings.simplefilter("ignore")
             # least-squares in Chebyshev basis (same polynomial model class)
             coef = np.polynomial.chebyshev.chebfit(t, ranks, deg)
+        if not np.all(np.isfinite(coef)):
+            # explicit linear fallback: the exact ramp rank ≈ (n'-1)(t+1)/2
+            # through the column's endpoints — predictions stay finite and
+            # exponential search corrects the rest
+            r_hi = float(ranks[-1])
+            coef = np.array([r_hi / 2.0, r_hi / 2.0])
         return PolyRankModel(coef, lo, hi, n)
 
     def predict(self, x) -> np.ndarray:

@@ -36,9 +36,21 @@ class ServingEngine:
 
     def __init__(self, index: LIMSIndex, *, refresh_every: int = 64,
                  sharded: bool | None = None, mesh: Mesh | None = None,
-                 async_refresh: bool = False):
+                 async_refresh: bool = False,
+                 build_backend: str | None = None):
         self._index = index
         self._refresh_every = int(refresh_every)
+        # online retrains route through the device builder (repro.build;
+        # DESIGN.md §6) whenever the kernels compile — on real
+        # accelerators partial reconstruction stops being the refresh
+        # bottleneck.  CPU runs interpret-mode kernels, where the device
+        # path only costs (retrains hold the update lock), so the
+        # default resolves by dispatch policy; pass "device"/"host" to
+        # pin it.
+        if build_backend is None:
+            from ..kernels.dispatch import default_interpret
+            build_backend = "host" if default_interpret() else "device"
+        self._build_backend = build_backend
         self._sharded = sharded
         self._mesh = mesh
         self._async = bool(async_refresh)
@@ -113,7 +125,7 @@ class ServingEngine:
 
     def retrain_cluster(self, c: int) -> None:
         with self._update_lock:
-            self._index.retrain_cluster(c)
+            self._index.retrain_cluster(c, backend=self._build_backend)
             # a retrain rewrites cluster structure the snapshot mirrors;
             # force the next refresh decision regardless of the
             # insert/delete count

@@ -1,0 +1,258 @@
+"""Device-builder correctness (repro.build; DESIGN.md §6).
+
+The acceptance property: an index built through the device pipeline
+(``LIMSIndex(backend="device")``) materializes host structures bitwise
+equal to the numpy build (same clustering, pivots, ring boundaries)
+and answers range/kNN queries bit-identically — through the host path,
+through ``QueryExecutor`` over an emitted snapshot, and through the
+sharded executor (the 4-fake-device CI leg runs the real ``shard_map``
+path over a device-built snapshot).
+
+The hypothesis property test sweeps metrics and seeds; the device
+retrain test covers the ``ServingEngine`` routing.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from _hypothesis_compat import given, settings, st
+
+from repro.build import batched_chebfit, build_snapshot, device_build
+from repro.core import (LIMSIndex, MetricSpace, LIMSSnapshot, QueryExecutor,
+                        ShardedExecutor, ServingEngine)
+from repro.core.metrics import dist_one_to_many
+from repro.data.datasets import gauss_mix
+
+N, D = 1500, 6
+
+
+@pytest.fixture(scope="module")
+def pair():
+    X = gauss_mix(N, D, seed=11)
+    host = LIMSIndex(MetricSpace(X, "l2"), n_clusters=6, m=3, n_rings=10)
+    dev = LIMSIndex(MetricSpace(X, "l2"), n_clusters=6, m=3, n_rings=10,
+                    backend="device")
+    return X, host, dev
+
+
+def _queries(X, n_q, seed=2, scale=0.004):
+    rng = np.random.default_rng(seed)
+    return X[rng.choice(len(X), n_q)] + rng.normal(0, scale,
+                                                   (n_q, X.shape[1]))
+
+
+def _radii(X, Q, metric="l2", sel=0.02):
+    return np.array([float(np.quantile(dist_one_to_many(q, X, metric), sel))
+                     for q in Q])
+
+
+# ----------------------------------------------------------- structure
+def test_device_build_matches_host_structures(pair):
+    """Clustering, pivots, ring boundaries and storage order must come
+    out bitwise equal: the sweeps pick the same centers/pivots and the
+    materialization recomputes the same exact f64 columns."""
+    X, host, dev = pair
+    assert dev.K == host.K
+    assert np.array_equal(host.clustering.center_idx,
+                          dev.clustering.center_idx)
+    assert [len(m) for m in host.clustering.members] == \
+           [len(m) for m in dev.clustering.members]
+    assert np.array_equal(host.clustering.assign, dev.clustering.assign)
+    for h, d in zip(host.clusters, dev.clusters):
+        assert np.array_equal(h.pivot_idx, d.pivot_idx)
+        assert np.array_equal(h.mapping.d_sorted, d.mapping.d_sorted)
+        assert np.array_equal(h.mapping.rids, d.mapping.rids)
+        assert np.array_equal(h.mapping.lims_sorted, d.mapping.lims_sorted)
+        assert np.array_equal(h.mapping.dist_min, d.mapping.dist_min)
+        assert np.array_equal(h.mapping.dist_max, d.mapping.dist_max)
+        assert np.array_equal(h.store_ids, d.store_ids)
+        # device-fit models are drop-in PolyRankModels over the same span
+        for hm, dm in zip(h.rank_models, d.rank_models):
+            assert dm.n == hm.n
+    assert host.default_delta_r == dev.default_delta_r
+
+
+def test_device_build_query_bit_identity(pair):
+    """Acceptance criterion: range and kNN results bit-identical between
+    the host-built and device-built index, on the host path and through
+    ``QueryExecutor`` over the emitted snapshots."""
+    X, host, dev = pair
+    Q = _queries(X, 8)
+    rs = _radii(X, Q)
+    for q, r in zip(Q, rs):
+        hi_, hd_, _ = host.range_query(q, r)
+        di_, dd_, _ = dev.range_query(q, r)
+        assert np.array_equal(hi_, di_) and np.array_equal(hd_, dd_)
+        hk_i, hk_d, _ = host.knn_query(q, 6)
+        dk_i, dk_d, _ = dev.knn_query(q, 6)
+        assert np.array_equal(hk_i, dk_i) and np.array_equal(hk_d, dk_d)
+        # and against brute force (exactness, not just agreement)
+        d_all = dist_one_to_many(q, X, "l2")
+        assert set(map(int, di_)) == set(np.where(d_all <= r)[0].tolist())
+    eh = QueryExecutor(LIMSSnapshot.build(host))
+    ed = QueryExecutor(LIMSSnapshot.build(dev))
+    for (ai, ad), (bi, bd) in zip(eh.range_query_batch(Q, rs),
+                                  ed.range_query_batch(Q, rs)):
+        assert np.array_equal(ai, bi) and np.array_equal(ad, bd)
+    ka, da = eh.knn_query_batch(Q, 6)
+    kb, db = ed.knn_query_batch(Q, 6)
+    assert np.array_equal(ka, kb) and np.array_equal(da, db)
+
+
+def test_device_snapshot_serves_sharded(pair):
+    """A device-built snapshot must serve through ``ShardedExecutor``
+    (the real shard_map path under the 4-fake-device CI leg) with
+    results bit-identical to the host index."""
+    X, host, dev = pair
+    snap = LIMSSnapshot.build(dev)
+    sx = ShardedExecutor(snap)
+    assert sx.n_shards == jax.device_count()
+    Q = _queries(X, 6, seed=5)
+    rs = _radii(X, Q)
+    for (ids, ds), q, r in zip(sx.range_query_batch(Q, rs), Q, rs):
+        h_ids, h_ds, _ = host.range_query(q, r)
+        assert set(map(int, ids)) == set(map(int, h_ids))
+        np.testing.assert_allclose(np.sort(ds), np.sort(h_ds), atol=0)
+    ids, ds = sx.knn_query_batch(Q, 5)
+    for b, q in enumerate(Q):
+        _, h_ds, _ = host.knn_query(q, 5)
+        np.testing.assert_allclose(np.sort(ds[b]), np.sort(h_ds), atol=0)
+
+
+# ------------------------------------------------------------- property
+@settings(max_examples=8, deadline=None, derandomize=True)
+@given(metric=st.sampled_from(["l2", "l1", "linf"]),
+       n=st.sampled_from([400, 700]),
+       k_clusters=st.sampled_from([4, 6]),
+       seed=st.integers(0, 200),
+       sel=st.floats(0.005, 0.1))
+def test_build_equivalence_property(metric, n, k_clusters, seed, sel):
+    """Satellite: across metrics and seeds the device builder and the
+    host numpy build agree on cluster assignment sizes, ring boundaries
+    and query results (range + kNN bit-identity through QueryExecutor
+    for the L2 device serving path)."""
+    X = gauss_mix(n, 5, seed=seed)
+    host = LIMSIndex(MetricSpace(X, metric), n_clusters=k_clusters, m=3,
+                     n_rings=8, seed=seed)
+    dev = LIMSIndex(MetricSpace(X, metric), n_clusters=k_clusters, m=3,
+                    n_rings=8, seed=seed, backend="device")
+    assert [len(mm) for mm in host.clustering.members] == \
+           [len(mm) for mm in dev.clustering.members]
+    for h, d in zip(host.clusters, dev.clusters):
+        assert np.array_equal(h.mapping.rids, d.mapping.rids)
+        assert np.array_equal(h.mapping.dist_min, d.mapping.dist_min)
+        assert np.array_equal(h.mapping.dist_max, d.mapping.dist_max)
+    Q = _queries(X, 4, seed=seed + 1)
+    rs = _radii(X, Q, metric, sel)
+    for q, r in zip(Q, rs):
+        hi_, hd_, _ = host.range_query(q, r)
+        di_, dd_, _ = dev.range_query(q, r)
+        assert np.array_equal(hi_, di_) and np.array_equal(hd_, dd_)
+    if metric == "l2":
+        a = QueryExecutor(LIMSSnapshot.build(host)).range_query_batch(Q, rs)
+        b = QueryExecutor(LIMSSnapshot.build(dev)).range_query_batch(Q, rs)
+        for (ai, ad), (bi, bd) in zip(a, b):
+            assert np.array_equal(ai, bi) and np.array_equal(ad, bd)
+        ka, da = QueryExecutor(LIMSSnapshot.build(host)).knn_query_batch(Q, 4)
+        kb, db = QueryExecutor(LIMSSnapshot.build(dev)).knn_query_batch(Q, 4)
+        assert np.array_equal(ka, kb) and np.array_equal(da, db)
+
+
+# ------------------------------------------------------ serving retrain
+def test_serving_engine_routes_retrain_through_device_builder():
+    """ServingEngine routes retrains through the device builder (by
+    default wherever the kernels compile; pinned here for the
+    CPU-interpret CI); retrain + refresh must fold buffers/tombstones
+    exactly, matching the host index it mirrors."""
+    from repro.kernels.dispatch import default_interpret
+    rng = np.random.default_rng(0)
+    X = gauss_mix(900, D, seed=5)
+    ix = LIMSIndex(MetricSpace(X, "l2"), n_clusters=4, m=3, n_rings=8)
+    se = ServingEngine(ix, refresh_every=0,        # manual refresh only
+                       build_backend="device")
+    assert se._build_backend == "device"
+    # the default resolves by dispatch policy: host loop on interpret
+    # backends (retrains hold the update lock), device when compiled
+    expected = "host" if default_interpret() else "device"
+    assert ServingEngine(ix, refresh_every=0)._build_backend == expected
+    new_rows = X[rng.choice(900, 12)] + rng.normal(0, 0.02, (12, D))
+    gids = [se.insert(r) for r in new_rows]
+    assert se.delete(X[7]) == 1
+    for c in range(ix.K):
+        se.retrain_cluster(c)                      # device-routed
+    se.refresh()
+    for ci in ix.clusters:                         # buffers all folded in
+        assert len(ci.buf_ids) == 0
+    all_rows = np.concatenate([X, new_rows])
+    Q = _queries(X, 5, seed=3)
+    rs = _radii(all_rows, Q)
+    for (ids, ds), q, r in zip(se.range_query_batch(Q, rs), Q, rs):
+        d_all = dist_one_to_many(q, all_rows, "l2")
+        truth = set(np.where(d_all <= r)[0].tolist()) - {7}
+        assert set(map(int, ids)) == truth
+    hit, _ = se.range_query(new_rows[2], 1e-9)
+    assert gids[2] in set(map(int, hit))
+
+
+def test_build_snapshot_emits_serving_snapshot():
+    X = gauss_mix(600, D, seed=9)
+    snap, index = build_snapshot(MetricSpace(X, "l2"), n_clusters=4, m=2,
+                                 n_rings=8)
+    assert isinstance(snap, LIMSSnapshot)
+    assert snap.live == index.live_count() == 600
+    q = X[17] + 1e-7
+    ids, ds = QueryExecutor(snap).range_query(q, 1e-5)
+    assert 17 in set(map(int, ids))
+
+
+def test_device_kmeans_backend_is_exact():
+    """kMeans clustering on device: different partition than the host's
+    f64 Lloyd loop is allowed — exactness of the materialized index is
+    not (every bound is recomputed exactly)."""
+    X = gauss_mix(800, 4, seed=3)
+    ix = LIMSIndex(MetricSpace(X, "l2"), n_clusters=5, m=2, n_rings=8,
+                   backend="device", clusterer="kmeans")
+    rng = np.random.default_rng(1)
+    for qi in rng.choice(800, 4):
+        q = X[qi] + rng.normal(0, 0.004, 4)
+        d = dist_one_to_many(q, X, "l2")
+        r = float(np.quantile(d, 0.02))
+        ids, _, _ = ix.range_query(q, r)
+        assert set(map(int, ids)) == set(np.where(d <= r)[0].tolist())
+
+
+# ------------------------------------------------------------ components
+def test_batched_chebfit_degenerate_groups():
+    """The one-launch fit must survive constant, single-element and
+    empty columns (device mirror of the hardened host fit)."""
+    n_max = 64
+    cols = np.zeros((4, n_max), np.float32)
+    rng = np.random.default_rng(0)
+    cols[0] = np.sort(rng.gamma(2.0, 1.0, n_max))     # healthy
+    cols[1] = 3.25                                     # constant column
+    cols[2, 0] = 1.5                                   # single element
+    counts = np.array([n_max, n_max, 1, 0])
+    coef, lo, hi, n, dg, err = batched_chebfit(
+        cols, counts, np.full(4, 8), 8)
+    coef = np.asarray(coef)
+    assert np.all(np.isfinite(coef))
+    # healthy fit predicts ranks decently
+    t = np.clip((cols[0] - float(lo[0])) / (float(hi[0]) - float(lo[0]))
+                * 2 - 1, -1, 1)
+    pred = np.polynomial.chebyshev.chebval(t, coef[0])
+    assert np.abs(pred - np.arange(n_max)).max() < n_max / 4
+    # degenerate groups: constant model over a non-empty span
+    assert not coef[1].any() and float(hi[1]) > float(lo[1])
+    assert not coef[2].any() and float(hi[2]) > float(lo[2])
+    assert not coef[3].any()
+    assert float(err[3]) == 0.0
+    # error estimates are bounded by n
+    assert np.all(np.asarray(err) <= np.asarray(n) + 1e-6)
+
+
+def test_device_build_rejects_generic_metrics():
+    from repro.data.datasets import signature
+    sig = signature(3, 40, seed=1)
+    with pytest.raises(ValueError):
+        device_build(MetricSpace(sig, "edit"), 3, m=2)

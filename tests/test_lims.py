@@ -168,6 +168,36 @@ def test_expsearch_matches_searchsorted(n, degree, guess_off, seed):
             assert binary_search(lst, float(x), side=side) == want
 
 
+def test_rank_model_degenerate_columns():
+    """Regression: constant / single-element / near-constant distance
+    columns must yield explicit constant-or-linear fallbacks with finite
+    coefficients, never an ill-conditioned high-degree fit."""
+    # single element → constant model over a non-empty span
+    m1 = PolyRankModel.fit(np.array([2.5]), degree=20)
+    assert m1.n == 1 and m1.hi > m1.lo
+    assert np.array_equal(m1.coef, np.zeros(1))
+    assert m1.predict_scalar(2.5) == 0
+    # constant column → constant model, rank 0 everywhere
+    mc = PolyRankModel.fit(np.full(50, 1.25), degree=20)
+    assert np.array_equal(mc.coef, np.zeros(1))
+    assert mc.predict_scalar(1.25) == 0
+    # two distinct values among many ties → at most a linear model
+    x = np.sort(np.array([0.5] * 40 + [1.5] * 24))
+    m2 = PolyRankModel.fit(x, degree=20)
+    assert len(m2.coef) <= 2 and np.all(np.isfinite(m2.coef))
+    assert m2.predict_scalar(0.5) == 0
+    assert m2.predict_scalar(1.5) == 40
+    # near-constant: one outlier among ties keeps the degree tiny and
+    # the prediction finite and in range
+    x = np.sort(np.concatenate([np.full(200, 3.0), [3.0 + 1e-12]]))
+    m3 = PolyRankModel.fit(x, degree=20)
+    assert np.all(np.isfinite(m3.coef)) and len(m3.coef) <= 2
+    assert 0 <= m3.predict_scalar(3.0) <= 200
+    # an empty column still round-trips
+    m0 = PolyRankModel.fit(np.empty(0), degree=20)
+    assert m0.n == 0 and m0.predict_scalar(1.0) == 0
+
+
 def test_rank_model_error_bounded():
     rng = np.random.default_rng(0)
     col = np.sort(rng.gamma(2.0, 1.0, size=5000))
