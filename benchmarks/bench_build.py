@@ -17,7 +17,6 @@ record so compiled-backend runs are distinguishable.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
@@ -27,7 +26,7 @@ from repro.core import LIMSIndex, MetricSpace
 from repro.core.metrics import dist_one_to_many
 from repro.kernels.dispatch import default_interpret
 
-from .common import QUICK, emit
+from .common import QUICK, emit, write_json
 
 SIZES = (2_000, 6_000) if QUICK else (4_000, 32_000)
 N_RETRAIN_INSERTS = 64
@@ -115,11 +114,10 @@ def main() -> None:
     # 1-shot noise, same policy as BENCH_serving.json)
     if not QUICK:
         root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-        with open(os.path.join(root, "BENCH_build.json"), "w") as f:
-            json.dump({"bench": "LIMS build + retrain wall time, host numpy "
-                                "loop vs device builder (repro.build)",
-                       "sizes": results}, f, indent=2)
-            f.write("\n")
+        write_json(os.path.join(root, "BENCH_build.json"),
+                   {"bench": "LIMS build + retrain wall time, host numpy "
+                             "loop vs device builder (repro.build)",
+                    "sizes": results})
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
 """Shared benchmark helpers: datasets, query workloads, measurement."""
 from __future__ import annotations
 
+import json
 import os
 import time
 
@@ -87,3 +88,11 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     RESULTS.append({"name": name, "us_per_call": round(float(us_per_call), 1),
                     "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def write_json(path: str, payload: dict) -> None:
+    """Persist a BENCH_<name>.json atomically (temp file + rename): an
+    interrupted run can never truncate a committed trajectory file.
+    Same publish primitive as the storage tier's manifest swap."""
+    from repro.storage import write_atomic
+    write_atomic(path, (json.dumps(payload, indent=2) + "\n").encode())

@@ -4,12 +4,13 @@ Prints ``name,us_per_call,derived`` CSV and persists every section's
 rows to ``BENCH_<section>.json`` (same top-level shape as
 ``BENCH_serving.json``: a ``bench`` description plus the payload) so
 the perf trajectory is tracked across PRs instead of only printed.
+All writes go through ``common.write_json`` (temp file + atomic
+rename), so an interrupted run can't truncate a tracked bench file.
 ``BENCH_QUICK=1`` shrinks scales — quick runs never overwrite the
 committed full-run numbers.
 """
 from __future__ import annotations
 
-import json
 import os
 import sys
 import time
@@ -47,9 +48,8 @@ def main() -> None:
         # only complete sections persist — a section that died mid-run
         # must not truncate the committed trajectory with partial rows
         if ok and slug and rows and not common.QUICK:
-            with open(os.path.join(root, f"BENCH_{slug}.json"), "w") as f:
-                json.dump({"bench": name, "rows": rows}, f, indent=2)
-                f.write("\n")
+            common.write_json(os.path.join(root, f"BENCH_{slug}.json"),
+                              {"bench": name, "rows": rows})
         print(f"# --- {name} done in {time.time()-t0:.0f}s",
               file=sys.stderr)
     if failures:

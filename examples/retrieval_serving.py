@@ -16,6 +16,7 @@ serves the models the framework trains.
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python examples/retrieval_serving.py
 """
+import tempfile
 import time
 
 import jax
@@ -168,6 +169,33 @@ def main() -> None:
     print(f"retrain_cluster({dirty}): {t_retrain*1e3:.0f} ms via the "
           f"device builder ({t_host_retrain*1e3:.0f} ms host rerun); "
           f"all inserts still retrievable. OK")
+
+    # 7) the paged storage tier (DESIGN.md §7): spill the snapshot to
+    # disk — rows laid out in learned-position page extents — then
+    # cold-start a fresh replica from the spilled directory.  Only the
+    # manifest + metadata load up front; row pages fault in on demand,
+    # driven by the certified candidate intervals, so the learned
+    # positions finally do the job the paper built them for: deciding
+    # which disk pages a query touches.
+    spill_dir = tempfile.mkdtemp(prefix="lims-spill-")
+    t0 = time.perf_counter()
+    manifest = ix.spill(spill_dir)
+    t_spill = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    cold = ServingEngine.from_spill(spill_dir)
+    t_cold = time.perf_counter() - t0
+    ids_cold, _ = cold.knn_query_batch(fresh, 1)
+    assert [int(i) for i in ids_cold[:, 0]] == gids, \
+        "cold-started replica must serve the spilled snapshot exactly"
+    io = cold.executor.last_io
+    st = cold.store.stats.snapshot()
+    print(f"paged store: spilled {manifest.total_pages} pages "
+          f"({cold.store.nbytes_file()/2**20:.1f} MiB) in {t_spill:.2f}s; "
+          f"cold start in {t_cold:.2f}s")
+    print(f"cold replica: batch of {len(fresh)} kNN queries touched "
+          f"{io['pages']} pages ({st['pages_per_query']:.1f}/query, "
+          f"{st['candidates_per_query']:.0f} candidates/query, cache hit "
+          f"rate {st['hit_rate']:.0%}); results match the warm engine. OK")
 
 
 if __name__ == "__main__":

@@ -195,16 +195,34 @@ def build_index(space: MetricSpace, n_clusters: int | None = None, **kw):
     return LIMSIndex(space, n_clusters=n_clusters, backend="device", **kw)
 
 
-def build_snapshot(space: MetricSpace, n_clusters: int | None = None, **kw):
+def build_snapshot(space: MetricSpace, n_clusters: int | None = None, *,
+                   spill_path: str | None = None,
+                   page_bytes: int | None = None,
+                   store: bool = False, **kw):
     """Device-build an index and emit its serving ``LIMSSnapshot``.
 
     Returns ``(snapshot, index)`` — the snapshot serves through
     ``QueryExecutor``/``ShardedExecutor``; the index remains the §5.3
     update target, exactly as with a host build.
+
+    ``spill_path`` additionally emits the paged disk layout as part of
+    the build (DESIGN.md §7): rows land in learned-position page extents
+    the moment they exist, so a freshly built corpus is cold-start
+    servable without a second pass.  ``store=True`` returns the
+    store-backed snapshot view instead of the resident one.
     """
     from ..core.snapshot import LIMSSnapshot
     index = build_index(space, n_clusters=n_clusters, **kw)
-    return LIMSSnapshot.build(index), index
+    snap = LIMSSnapshot.build(index)
+    if spill_path is not None:
+        from ..storage import DEFAULT_PAGE_BYTES, PagedStore
+        snap.spill(spill_path,
+                   page_bytes=page_bytes or DEFAULT_PAGE_BYTES)
+        if store:
+            snap = snap.with_store(PagedStore(spill_path))
+    elif store:
+        raise ValueError("store=True requires spill_path")
+    return snap, index
 
 
 # ------------------------------------------------------------------ retrain

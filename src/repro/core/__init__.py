@@ -18,12 +18,12 @@ from .pivots import fft_pivots
 from .rankmodel import (PolyRankModel, SearchStats, binary_search,
                         exponential_search)
 from .serving import ServingEngine
-from .snapshot import LIMSSnapshot
+from .snapshot import LIMSSnapshot, maybe_paged
 
 __all__ = [
     "BatchedLIMS", "Clustering", "kcenter", "kmeans", "LIMSIndex",
-    "QueryStats", "LIMSSnapshot", "QueryExecutor", "ShardedExecutor",
-    "make_executor", "ServingEngine",
+    "QueryStats", "LIMSSnapshot", "maybe_paged", "QueryExecutor",
+    "ShardedExecutor", "make_executor", "ServingEngine",
     "KSelectResult", "select_k", "PivotMapping", "build_mapping",
     "lims_value", "ring_of_rank", "MetricSpace", "cdist",
     "dist_one_to_many", "PageStore", "fft_pivots", "PolyRankModel",

@@ -22,14 +22,18 @@ from __future__ import annotations
 
 from .executor import QueryExecutor
 from .index import LIMSIndex
-from .snapshot import LIMSSnapshot
+from .snapshot import LIMSSnapshot, maybe_paged
 
 
 class BatchedLIMS(QueryExecutor):
-    """Immutable device snapshot of a LIMSIndex (vector metrics, L2)."""
+    """Immutable device snapshot of a LIMSIndex (vector metrics, L2).
+
+    Under ``REPRO_STORAGE=paged`` the snapshot spills to a self-cleaning
+    paged store and serves store-backed (bit-identical results, page-
+    granular IO) — the CI storage leg runs the whole suite this way."""
 
     def __init__(self, index: LIMSIndex):
-        super().__init__(LIMSSnapshot.build(index))
+        super().__init__(maybe_paged(LIMSSnapshot.build(index)))
 
     # legacy attribute surface (pre-split callers poked these directly)
     @property

@@ -37,6 +37,7 @@ from jax.experimental.shard_map import shard_map
 
 from ..kernels import ops
 from ..sharding.logical import default_rules, serving_mesh, spec_for
+from ..storage import plan_batch
 from .metrics import dist_one_to_many
 from .snapshot import _DEVICE_FIELDS, LIMSSnapshot
 
@@ -46,6 +47,26 @@ from .snapshot import _DEVICE_FIELDS, LIMSSnapshot
 _R_REL = 1e-5       # relative radius inflation for the ring box
 _R_ABS = 1e-4       # absolute radius inflation for the ring box
 _BALL_ABS = 1e-3    # absolute inflation for the distance-ball prefilter
+# padding rows for bucketed store-mode kernel launches: far outside any
+# ball, large but finite so f32 arithmetic stays NaN-free
+_FAR = np.float32(1e30)
+
+
+def _pad_bucket(rows32: np.ndarray, min_rows: int = 128) -> np.ndarray:
+    """Pad gathered rows to the next power-of-two bucket (≥ ``min_rows``).
+
+    Store-mode launches run over candidate sets whose size varies per
+    batch and per kNN round; without bucketing every distinct row count
+    is a fresh jit compile on compiled backends.  Buckets cap the number
+    of executable shapes at log₂(P); padding rows sit at distance ~1e30
+    so they can never enter any ball, and callers slice kernel outputs
+    back to the true count (per-pair math is unaffected by padding)."""
+    n = rows32.shape[0]
+    bucket = max(min_rows, 1 << max(n - 1, 1).bit_length())
+    if bucket <= n:
+        return rows32
+    pad = np.full((bucket - n, rows32.shape[1]), _FAR, np.float32)
+    return np.concatenate([rows32, pad])
 
 
 def _candidate_mask_arrays(qf, rf, snap: LIMSSnapshot, n_rings: int):
@@ -95,10 +116,21 @@ def _candidate_mask_arrays(qf, rf, snap: LIMSSnapshot, n_rings: int):
 
 
 class QueryExecutor:
-    """Single-device kernel pipeline + exact host drivers over a snapshot."""
+    """Single-device kernel pipeline + exact host drivers over a snapshot.
+
+    A snapshot carrying a paged store (``snap.store``, DESIGN.md §7)
+    flips the row-touching stages to *store mode*: the candidate mask is
+    computed from resident metadata exactly as before, then the IO-batch
+    scheduler converts it into deduplicated page runs, the store fetches
+    them once per batch, and the Pallas ball prefilter plus the final
+    f64 refinement run on the gathered rows — bit-identical results,
+    page-granular IO (the paper's cost model, finally driven by the
+    learned positions)."""
 
     def __init__(self, snapshot: LIMSSnapshot):
         self.snap = snapshot
+        # IO summary of the most recent store-mode batch (None otherwise)
+        self.last_io: dict | None = None
 
     @property
     def live(self) -> int:
@@ -110,9 +142,11 @@ class QueryExecutor:
         """(B, P) bool — error-widened ring box ∧ TriPrune ∧ validity."""
         return _candidate_mask_arrays(qf, rf, self.snap, self.snap.n_rings)
 
-    def _hits(self, qf: jax.Array, rf: jax.Array) -> jax.Array:
+    def _hits(self, qf: jax.Array, rf: jax.Array):
         """(B, P) bool — candidates ∧ fused L2-ball prefilter."""
         s = self.snap
+        if s.store is not None:
+            return self._hits_store(qf, rf)
         cand = self._candidate_mask(qf, rf)
         ball, _ = ops.range_filter(qf, s.rows.reshape(s.n_slots, s.d),
                                    rf * (1.0 + _R_REL) + _BALL_ABS)
@@ -121,8 +155,43 @@ class QueryExecutor:
     def _sq_dists(self, qf: jax.Array) -> jax.Array:
         """(B, P) f32 squared distances to every slot, inf where invalid."""
         s = self.snap
+        if s.store is not None:
+            raise RuntimeError(
+                "store-backed executor never scans every slot; the kNN "
+                "driver routes through _knn_store")
         d2 = ops.pdist(qf, s.rows.reshape(s.n_slots, s.d))
         return jnp.where(s.valid.reshape(-1)[None], d2, jnp.inf)
+
+    # ----------------------------------------------------- storage tier
+    def _hits_store(self, qf: jax.Array, rf: jax.Array) -> np.ndarray:
+        """Store-mode ``_hits``: same candidate mask, ball prefilter on
+        gathered pages.  Per-pair kernel math is independent of which
+        other rows share a launch and the gathered f32 rows are the same
+        downcast the resident snapshot holds, so the mask is identical
+        to the in-memory path (DESIGN.md §7)."""
+        s = self.snap
+        store = s.store
+        cand = np.asarray(self._candidate_mask(qf, rf))
+        plan = plan_batch(cand, store.layout)
+        store.fetch(plan)
+        hits = np.zeros_like(cand)
+        if len(plan.slots):
+            rows64 = store.gather(plan.slots)
+            ball, _ = ops.range_filter(
+                qf, jnp.asarray(_pad_bucket(rows64.astype(np.float32))),
+                rf * (1.0 + _R_REL) + _BALL_ABS)
+            ball = np.asarray(ball, bool)[:, :len(plan.slots)]
+            hits[:, plan.slots] = cand[:, plan.slots] & ball
+        store.record_queries(plan.pages_per_query, plan.cand_per_query)
+        self.last_io = plan.summary()
+        return hits
+
+    def _refine_rows(self, idx: np.ndarray) -> np.ndarray:
+        """f64 rows for flat slot ids: resident matrix or page gather
+        (cache-hot — the prefilter just fetched these pages)."""
+        if self.snap.store is not None:
+            return self.snap.store.gather(idx)
+        return self.snap.rows_np[idx]
 
     # ------------------------------------------------------- range queries
     def range_query_batch(self, Q, r):
@@ -143,7 +212,7 @@ class QueryExecutor:
         for b in range(B):
             idx = np.nonzero(hit[b])[0]
             ids = s.gids_np[idx]
-            d_true = dist_one_to_many(Q[b], s.rows_np[idx], "l2")
+            d_true = dist_one_to_many(Q[b], self._refine_rows(idx), "l2")
             keep = d_true <= r_arr[b]
             out.append((ids[keep], d_true[keep]))
         return out
@@ -168,6 +237,8 @@ class QueryExecutor:
         k_eff = min(int(k), s.live)
         if k_eff <= 0:
             return (np.empty((B, 0), np.int64), np.empty((B, 0)))
+        if s.store is not None:
+            return self._knn_store(Q, k_eff, max_rounds)
         qf = jnp.asarray(Q, jnp.float32)
         d2 = self._sq_dists(qf)                             # (B, P)
         # seed radii at the f32 k-th distance: the loop usually certifies
@@ -199,15 +270,119 @@ class QueryExecutor:
             r = np.where(done, r, r * 2.0)
         else:
             final[~done] = s.valid_np[None]       # exact fallback: scan
+        return self._refine_topk(Q, final, k_eff)
+
+    def _refine_topk(self, Q, final: np.ndarray, k_eff: int):
+        """Exact f64 refinement of the certified candidate sets: the
+        shared tail of both kNN drivers.  ``final`` is a superset of the
+        closed k-th ball per query, so the stable distance sort selects
+        the same k results whichever driver produced it."""
+        s = self.snap
+        B = Q.shape[0]
         ids_out = np.empty((B, k_eff), np.int64)
         d_out = np.empty((B, k_eff))
         for b in range(B):
             idx = np.nonzero(final[b])[0]
-            d_true = dist_one_to_many(Q[b], s.rows_np[idx], "l2")
+            d_true = dist_one_to_many(Q[b], self._refine_rows(idx), "l2")
             sel = np.argsort(d_true, kind="stable")[:k_eff]
             ids_out[b] = s.gids_np[idx[sel]]
             d_out[b] = d_true[sel]
         return ids_out, d_out
+
+    def _knn_store(self, Q: np.ndarray, k_eff: int, max_rounds: int):
+        """Store-mode batched kNN: growing-radius rounds whose IO is the
+        candidate pages, not a full scan.
+
+        Each round runs the resident-metadata candidate mask for the
+        whole batch, fetches only pages not yet gathered (the scheduler
+        dedupes; earlier rounds' pages are cache hits — Alg. 2's
+        never-re-read-a-page contract), computes f32 distances on the
+        newly gathered rows with the same ``pdist`` kernel, and
+        certifies per query with the in-memory driver's exact guard-band
+        test.  The certified set is a superset of the closed k-th ball
+        — ``_refine_topk`` therefore returns results bit-identical to
+        the in-memory executor (DESIGN.md §7)."""
+        s = self.snap
+        store = s.store
+        B = Q.shape[0]
+        qf = jnp.asarray(Q, jnp.float32)
+        K, n_max, m = s.rids.shape
+        # seed radii at the nearest-pivot distance: pivots are data rows,
+        # so the seed ball is non-empty and doubling reaches the k-th
+        # ball in O(log) rounds.  Clusters with no live slots (deleted
+        # out, or the inert padding a sharded snapshot carries) hold
+        # zero/stale pivot rows — mask them so they can't collapse the
+        # seed below any real point's distance
+        dq = np.asarray(jnp.sqrt(jnp.maximum(
+            ops.pdist(qf, s.pivots.reshape(K * m, s.d)), 0.0)))
+        live_k = s.valid_np.reshape(K, n_max).any(axis=1)       # (K,)
+        dqm = np.where(np.repeat(live_k, m)[None], dq, np.inf)
+        r = dqm.min(axis=1).astype(np.float64) * (1.0 + 1e-3) + _BALL_ABS
+        done = np.zeros(B, bool)
+        final = np.zeros((B, s.n_slots), bool)
+        pos = np.full(s.n_slots, -1, np.int64)    # slot → gathered column
+        d2g = np.empty((B, 0), np.float32)        # sq dists, gathered slots
+        pages_seen = [set() for _ in range(B)]    # per-query IO metric
+        seen = np.zeros((B, s.n_slots), bool)     # per-query fetched cands
+        for _ in range(max_rounds):
+            rf = jnp.asarray(r, jnp.float32)
+            cand = np.array(self._candidate_mask(qf, rf))
+            cand[done] = False            # frozen queries stop driving IO
+            # per_query=False: the pages_seen sets below are this
+            # driver's cross-round page accounting
+            plan = plan_batch(cand, store.layout, per_query=False)
+            store.fetch(plan)
+            # pages(∪ rounds) = ∪ pages(new slots per round): only map
+            # slots not already charged to the query
+            newly = cand & ~seen
+            seen |= cand
+            for b in np.nonzero(newly.any(axis=1))[0]:
+                pages_seen[b].update(store.layout.slot_pages(
+                    np.nonzero(newly[b])[0]).tolist())
+            new = plan.slots[pos[plan.slots] < 0]
+            if len(new):
+                rows64 = store.gather(new)
+                d2_new = np.asarray(ops.pdist(
+                    qf, jnp.asarray(_pad_bucket(
+                        rows64.astype(np.float32)))))[:, :len(new)]
+                pos[new] = d2g.shape[1] + np.arange(len(new))
+                d2g = np.concatenate([d2g, d2_new], axis=1)
+            r32 = np.asarray(rf)
+            thr = (r32 * np.float32(1.0 + _R_REL) +
+                   np.float32(_BALL_ABS)) ** 2    # f32 guard-band ball
+            cert = r32 * np.float32(1.0 - _R_REL) - np.float32(_BALL_ABS)
+            for b in np.nonzero(~done)[0]:
+                sl = np.nonzero(cand[b])[0]
+                if len(sl) < k_eff:
+                    continue
+                db = d2g[b, pos[sl]]
+                inball = db <= thr[b]
+                if int(inball.sum()) < k_eff:
+                    continue
+                kth = np.sqrt(np.float32(max(
+                    np.partition(db[inball], k_eff - 1)[k_eff - 1], 0.0)))
+                # same certification as the in-memory driver: the k-th
+                # ball fits strictly inside the queried radius minus the
+                # f32 guard band
+                if kth <= cert[b]:
+                    final[b, sl[inball]] = True
+                    done[b] = True
+            if done.all():
+                break
+            r = np.where(done, r, r * 2.0)
+        else:
+            final[~done] = s.valid_np[None]       # exact fallback: scan
+            seen[~done] = s.valid_np[None]
+        ppq = [len(p) for p in pages_seen]
+        # candidates = rows fetched for the query across every round
+        # (the union of its candidate sets), matching the range path's
+        # accounting — NOT the smaller certified final set
+        cpq = seen.sum(axis=1)
+        store.record_queries(ppq, cpq)
+        self.last_io = {"pages": len(set().union(*pages_seen)),
+                        "pages_per_query": ppq,
+                        "candidates_per_query": [int(c) for c in cpq]}
+        return self._refine_topk(Q, final, k_eff)
 
     def knn_query(self, q, k: int):
         """Single-query convenience wrapper over the batch engine."""
@@ -260,19 +435,23 @@ class ShardedExecutor(QueryExecutor):
         self._cand_fn, self._hits_fn, self._sq_fn = _sharded_pipeline(
             mesh, axis, snapshot.n_rings, specs)
 
-    # sharded device stages (same host drivers as the base class)
+    # sharded device stages (same host drivers as the base class).  In
+    # store mode only the candidate mask runs sharded — the ball
+    # prefilter and refinement happen on host-gathered pages, so those
+    # stages delegate to the base class (which routes them through the
+    # store; the mask it requests still dispatches back here).
     def _candidate_mask(self, qf, rf):
         if self.n_shards <= 1:
             return super()._candidate_mask(qf, rf)
         return self._cand_fn(qf, rf, *self._dev_arrays)
 
     def _hits(self, qf, rf):
-        if self.n_shards <= 1:
+        if self.n_shards <= 1 or self.snap.store is not None:
             return super()._hits(qf, rf)
         return self._hits_fn(qf, rf, *self._dev_arrays)
 
     def _sq_dists(self, qf):
-        if self.n_shards <= 1:
+        if self.n_shards <= 1 or self.snap.store is not None:
             return super()._sq_dists(qf)
         return self._sq_fn(qf, *self._dev_arrays)
 

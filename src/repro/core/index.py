@@ -565,3 +565,14 @@ class LIMSIndex:
     def reset_page_counters(self) -> None:
         for ci in self.clusters:
             ci.store.reset_counters()
+
+    def spill(self, path: str, page_bytes: int | None = None):
+        """Spill this index's serving snapshot to a paged store directory
+        (DESIGN.md §7): rows laid out in learned-position page extents
+        plus the snapshot metadata, ready for store-backed execution or
+        cold-start serving (``ServingEngine.from_spill``).  Defaults to
+        the index's own page size so the on-disk geometry matches the
+        host ``PageStore`` accounting.  Returns the store manifest."""
+        from .snapshot import LIMSSnapshot
+        pb = self.page_bytes if page_bytes is None else page_bytes
+        return LIMSSnapshot.build(self).spill(path, page_bytes=pb)

@@ -22,22 +22,45 @@ snapshot*, the usual contract of a serving index (DESIGN.md §5).
 """
 from __future__ import annotations
 
+import shutil
+import tempfile
 import threading
+import weakref
 
 from jax.sharding import Mesh
 
+from ..storage import (DEFAULT_CACHE_PAGES, DEFAULT_PAGE_BYTES, PagedStore,
+                       storage_mode)
 from .executor import QueryExecutor, make_executor
 from .index import LIMSIndex
 from .snapshot import LIMSSnapshot
 
 
 class ServingEngine:
-    """Double-buffered snapshot serving over a mutable ``LIMSIndex``."""
+    """Double-buffered snapshot serving over a mutable ``LIMSIndex``.
 
-    def __init__(self, index: LIMSIndex, *, refresh_every: int = 64,
+    Storage (DESIGN.md §7): with ``storage="paged"`` (or the process-wide
+    ``REPRO_STORAGE=paged`` default) every snapshot generation spills to
+    ``storage_path`` and serves store-backed — row payloads on disk
+    behind an LRU page cache, query IO planned page-wise.  A refresh
+    writes only the clusters whose rows changed as *new* page extents
+    (a retrain's partial reconstruction touches one extent, not the
+    corpus) and publishes with one atomic manifest swap; the long-lived
+    ``PagedStore`` keeps its warm cache across generations because page
+    ids are append-only.  :meth:`from_spill` is the cold-start path — a
+    replica begins serving from a spilled directory without rebuilding
+    anything.
+    """
+
+    def __init__(self, index: LIMSIndex | None, *, refresh_every: int = 64,
                  sharded: bool | None = None, mesh: Mesh | None = None,
                  async_refresh: bool = False,
-                 build_backend: str | None = None):
+                 build_backend: str | None = None,
+                 storage: str | None = None,
+                 storage_path: str | None = None,
+                 page_bytes: int = DEFAULT_PAGE_BYTES,
+                 cache_pages: int | None = DEFAULT_CACHE_PAGES,
+                 _initial: QueryExecutor | None = None):
         self._index = index
         self._refresh_every = int(refresh_every)
         # online retrains route through the device builder (repro.build;
@@ -54,6 +77,19 @@ class ServingEngine:
         self._sharded = sharded
         self._mesh = mesh
         self._async = bool(async_refresh)
+        if storage is None:
+            storage = storage_mode() or None
+        if storage not in (None, "paged"):
+            raise ValueError(f"unknown storage mode {storage!r}")
+        self._storage = storage
+        self._page_bytes = int(page_bytes)
+        self._cache_pages = cache_pages
+        self._store: PagedStore | None = None
+        self._storage_path = storage_path
+        if storage == "paged" and storage_path is None:
+            self._storage_path = tempfile.mkdtemp(prefix="lims-store-")
+            weakref.finalize(self, shutil.rmtree, self._storage_path,
+                             ignore_errors=True)
         # guards host-index mutation + snapshot builds (never queries)
         self._update_lock = threading.Lock()
         # guards background-refresh thread bookkeeping
@@ -62,17 +98,80 @@ class ServingEngine:
         self._refresh_again = False
         self.generation = 0
         self.pending_mutations = 0
-        self._active: QueryExecutor = self._build_executor()
+        if _initial is not None:
+            self._active: QueryExecutor = _initial
+            view = getattr(_initial.snap, "store", None)
+            # the engine holds the shared reader; snapshots hold
+            # per-generation views of it
+            self._store = view.base if view is not None else None
+        else:
+            self._active = self._build_executor()
         self._standby: QueryExecutor | None = None
+
+    # ----------------------------------------------------------- cold start
+    @classmethod
+    def from_spill(cls, path: str, *, index: LIMSIndex | None = None,
+                   sharded: bool | None = None, mesh: Mesh | None = None,
+                   cache_pages: int | None = DEFAULT_CACHE_PAGES,
+                   **kw) -> "ServingEngine":
+        """Cold-start a serving replica from a spilled snapshot directory.
+
+        Serving begins immediately — only the manifest and metadata load
+        up front; row pages fault in on demand through the page cache
+        (replica warm-up is query-driven).  Without ``index`` the engine
+        is read-only: updates and refreshes raise until a host index is
+        supplied via :meth:`attach_index` (e.g. rebuilt in the
+        background).  With ``index``, refreshes write back to ``path``.
+        """
+        snap = LIMSSnapshot.load(path, store=True, cache_pages=cache_pages)
+        ex = make_executor(snap, sharded=sharded, mesh=mesh)
+        # refresh writebacks must keep the on-disk page geometry
+        kw.setdefault("page_bytes", snap.store.manifest.page_bytes)
+        return cls(index, storage="paged", storage_path=path,
+                   sharded=sharded, mesh=mesh, cache_pages=cache_pages,
+                   _initial=ex, **kw)
+
+    def attach_index(self, index: LIMSIndex) -> None:
+        """Give a cold-started engine its mutable host index (updates and
+        refreshes become available; the next refresh snapshots it)."""
+        with self._update_lock:
+            self._index = index
+
+    def _require_index(self) -> LIMSIndex:
+        if self._index is None:
+            raise RuntimeError(
+                "cold-started engine is read-only: no host index attached "
+                "(use attach_index() once one is built)")
+        return self._index
 
     # ------------------------------------------------------------ plumbing
     def _build_executor(self) -> QueryExecutor:
-        snap = LIMSSnapshot.build(self._index)
+        snap = LIMSSnapshot.build(self._require_index())
+        if self._storage == "paged":
+            snap.spill(self._storage_path, page_bytes=self._page_bytes)
+            if self._store is None:
+                self._store = PagedStore(self._storage_path,
+                                         cache_pages=self._cache_pages)
+            else:
+                # adopt the freshly published generation: rewritten
+                # clusters reference appended extents, cached pages of
+                # untouched clusters stay warm (append-only page ids).
+                # with_store then freezes the new layout into this
+                # snapshot's view — executors still serving the previous
+                # generation keep gathering through THEIR view, so the
+                # swap can never remap an in-flight batch's slots.
+                self._store.refresh()
+            snap = snap.with_store(self._store)
         return make_executor(snap, sharded=self._sharded, mesh=self._mesh)
 
     @property
-    def index(self) -> LIMSIndex:
+    def index(self) -> LIMSIndex | None:
         return self._index
+
+    @property
+    def store(self) -> PagedStore | None:
+        """The paged-store reader (None when serving resident)."""
+        return self._store
 
     @property
     def executor(self) -> QueryExecutor:
@@ -108,7 +207,7 @@ class ServingEngine:
     # refresh, which is harmless (the second sees zero pending).
     def insert(self, p) -> int:
         with self._update_lock:
-            gid = self._index.insert(p)
+            gid = self._require_index().insert(p)
             self.pending_mutations += 1
             pending = self.pending_mutations
         self._maybe_refresh(pending)
@@ -116,7 +215,7 @@ class ServingEngine:
 
     def delete(self, q) -> int:
         with self._update_lock:
-            removed = self._index.delete(q)
+            removed = self._require_index().delete(q)
             self.pending_mutations += removed
             pending = self.pending_mutations
         if removed:
@@ -125,7 +224,8 @@ class ServingEngine:
 
     def retrain_cluster(self, c: int) -> None:
         with self._update_lock:
-            self._index.retrain_cluster(c, backend=self._build_backend)
+            self._require_index().retrain_cluster(
+                c, backend=self._build_backend)
             # a retrain rewrites cluster structure the snapshot mirrors;
             # force the next refresh decision regardless of the
             # insert/delete count

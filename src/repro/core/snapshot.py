@@ -48,6 +48,9 @@ refinement removes every extra candidate — results are bit-identical to
 """
 from __future__ import annotations
 
+import shutil
+import tempfile
+import weakref
 from dataclasses import dataclass, fields, replace
 
 import numpy as np
@@ -56,6 +59,8 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels import ops
+from ..storage import (DEFAULT_CACHE_PAGES, DEFAULT_PAGE_BYTES, PagedStore,
+                       StoreView, load_meta, spill_rows, storage_mode)
 from .index import LIMSIndex
 
 _E_SLACK = 2.0      # ranks: rint (±0.5 twice) + f32 eval slop
@@ -68,7 +73,9 @@ _DEVICE_FIELDS = (
 )
 # static / host-side fields (pytree aux)
 _AUX_FIELDS = ("K", "m", "n_rings", "n_max", "live",
-               "gids_np", "rows_np", "valid_np")
+               "gids_np", "rows_np", "valid_np", "store")
+# everything spilled to the store's metadata file (rows go to pages.bin)
+_SPILL_FIELDS = tuple(f for f in _DEVICE_FIELDS if f != "rows")
 
 
 @dataclass(frozen=True)
@@ -101,6 +108,12 @@ class LIMSSnapshot:
     gids_np: np.ndarray
     rows_np: np.ndarray
     valid_np: np.ndarray
+    # paged storage tier (DESIGN.md §7): when set, row payloads live on
+    # disk — ``rows``/``rows_np`` are empty placeholders and the executor
+    # fetches candidate pages through this store view (the shared reader
+    # bound to THIS snapshot's generation layout, so a later writeback
+    # can never remap an in-flight batch's slots)
+    store: StoreView | None = None
 
     # ------------------------------------------------------------- pytree
     def tree_flatten(self):
@@ -228,6 +241,102 @@ class LIMSSnapshot:
                 [self.valid_np, np.zeros(pk * nm, bool)]),
         )
 
+    # ------------------------------------------------------ paged storage
+    def spill(self, path: str, page_bytes: int = DEFAULT_PAGE_BYTES):
+        """Spill to a paged store directory (DESIGN.md §7): rows land in
+        cluster-major page extents (mapped-value order), every other
+        array in the generation's metadata file, published by one atomic
+        manifest swap.  Incremental over an existing store — clusters
+        with unchanged row bytes keep their extents.  Returns the new
+        manifest; ``self`` is untouched.
+        """
+        K, n_max, d = self.K, self.n_max, self.d
+        assert self.rows_np.shape == (K * n_max, d), \
+            "spill needs a resident snapshot (store-backed rows are on disk)"
+        meta = {f: np.asarray(getattr(self, f)) for f in _SPILL_FIELDS}
+        meta.update(
+            gids_np=self.gids_np, valid_np=self.valid_np,
+            scalars=np.asarray(
+                [self.K, self.m, self.n_rings, self.n_max, self.live],
+                np.int64))
+        return spill_rows(path, self.rows_np.reshape(K, n_max, d),
+                          page_bytes=page_bytes, meta_arrays=meta)
+
+    def with_store(self, store: "PagedStore | StoreView") -> "LIMSSnapshot":
+        """Store-backed view of this snapshot: row payloads dropped (the
+        executor fetches them from ``store`` page-wise), all query
+        metadata kept resident.  A raw ``PagedStore`` is bound through a
+        ``StoreView`` freezing its *current* generation's layout — call
+        this right after :meth:`spill` so snapshot and layout match.
+        Pure — returns a new snapshot."""
+        if isinstance(store, PagedStore):
+            store = store.view()
+        return replace(
+            self, rows=jnp.zeros((self.K, 0, self.d), jnp.float32),
+            rows_np=np.zeros((0, self.d), np.float64), store=store)
+
+    @classmethod
+    def load(cls, path: str, store: "bool | PagedStore | None" = None,
+             cache_pages: int | None = DEFAULT_CACHE_PAGES):
+        """Load a spilled snapshot.
+
+        ``store=None/False``: resident — rows read back from the page
+        file; bit-identical round trip with :meth:`spill`.
+        ``store=True``: cold-start — metadata loads (fast), rows stay on
+        disk behind a fresh ``PagedStore`` with ``cache_pages`` capacity.
+        ``store=<PagedStore>``: serve through an existing reader (keeps
+        its warm page cache; refreshed to the latest manifest).
+        """
+        meta, man = load_meta(path)
+        K, m, n_rings, n_max, live = (int(v) for v in meta["scalars"])
+        d = man.d
+        kw = {f: jnp.asarray(meta[f]) for f in _SPILL_FIELDS}
+        if isinstance(store, StoreView):
+            store = store.base
+        # the view's layout comes from the SAME manifest read as the
+        # metadata above — a writeback landing between the two reads
+        # would otherwise pair generation-G arrays with G+1 extents
+        if isinstance(store, PagedStore):
+            ps = store.refresh().view(man.layout())
+        elif store:
+            ps = PagedStore(path, cache_pages=cache_pages).view(man.layout())
+        else:
+            ps = None
+        if ps is not None:
+            rows = jnp.zeros((K, 0, d), jnp.float32)
+            rows_np = np.zeros((0, d), np.float64)
+        else:
+            reader = PagedStore(path, cache_pages=0)
+            rows64 = np.stack([reader.read_cluster(k) for k in range(K)])
+            rows = jnp.asarray(rows64.astype(np.float32))
+            rows_np = rows64.reshape(K * n_max, d)
+        return cls(K=K, m=m, n_rings=n_rings, n_max=n_max, live=live,
+                   rows=rows, rows_np=rows_np,
+                   gids_np=np.asarray(meta["gids_np"], np.int64),
+                   valid_np=np.asarray(meta["valid_np"], bool),
+                   store=ps, **kw)
+
+
+def maybe_paged(snap: "LIMSSnapshot", path: str | None = None,
+                page_bytes: int = DEFAULT_PAGE_BYTES,
+                cache_pages: int | None = DEFAULT_CACHE_PAGES
+                ) -> "LIMSSnapshot":
+    """Apply the process-wide ``REPRO_STORAGE`` policy to a fresh
+    snapshot: under ``paged``, spill it (to ``path``, or a self-cleaning
+    temp directory) and return the store-backed view, so the default
+    serving surfaces exercise the storage tier suite-wide; otherwise
+    return ``snap`` unchanged."""
+    if storage_mode() != "paged" or snap.store is not None:
+        return snap
+    cleanup = path is None
+    if path is None:
+        path = tempfile.mkdtemp(prefix="lims-paged-")
+    snap.spill(path, page_bytes=page_bytes)
+    store = PagedStore(path, cache_pages=cache_pages)
+    if cleanup:
+        weakref.finalize(store, shutil.rmtree, path, ignore_errors=True)
+    return snap.with_store(store)
+
 
 jax.tree_util.register_pytree_node(
     LIMSSnapshot, LIMSSnapshot.tree_flatten, LIMSSnapshot.tree_unflatten)
@@ -282,4 +391,4 @@ def _certified_rank_table(index: LIMSIndex):
     return coef, lo, hi, n_model, err
 
 
-__all__ = ["LIMSSnapshot"]
+__all__ = ["LIMSSnapshot", "maybe_paged"]

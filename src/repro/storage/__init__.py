@@ -1,0 +1,40 @@
+"""Paged storage tier: learned-position disk layout for LIMS snapshots.
+
+The paper's rank models approximate where each record sits **on disk**;
+this package is the disk.  A spilled snapshot directory holds an
+append-only page file (cluster-major extents, rows in mapped-value
+order — ``layout``), an atomic JSON manifest (``manifest``), and the
+snapshot's non-row arrays; serving reads it through a ``PagedStore``
+(mmap + LRU page cache with access counters — ``cache``/``store``)
+driven by the IO-batch scheduler (``scheduler``), which turns the
+executor's certified candidate sets into deduplicated sequential page
+runs fetched once per query batch.  DESIGN.md §7 is the full story,
+including why store-backed results stay bit-identical to the resident
+path.
+
+``REPRO_STORAGE=paged`` flips the default serving surfaces
+(``BatchedLIMS``, ``ServingEngine``) to spill-and-serve through this
+tier — CI runs the whole suite that way on a dedicated leg.
+"""
+from __future__ import annotations
+
+import os
+
+from .cache import DEFAULT_CACHE_PAGES, CacheStats, LRUPageCache
+from .layout import DEFAULT_PAGE_BYTES, PageLayout, rows_per_page
+from .manifest import Manifest, write_atomic
+from .scheduler import IOPlan, page_runs, plan_batch
+from .store import PagedStore, StoreView, load_meta, spill_rows
+
+
+def storage_mode() -> str:
+    """The process-wide storage default: '' (resident) or 'paged'."""
+    return os.environ.get("REPRO_STORAGE", "").strip().lower()
+
+
+__all__ = [
+    "CacheStats", "DEFAULT_CACHE_PAGES", "DEFAULT_PAGE_BYTES", "IOPlan",
+    "LRUPageCache", "Manifest", "PageLayout", "PagedStore", "StoreView",
+    "load_meta", "page_runs", "plan_batch", "rows_per_page", "spill_rows",
+    "storage_mode", "write_atomic",
+]

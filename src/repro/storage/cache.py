@@ -1,0 +1,117 @@
+"""LRU page cache + the store's IO / serving-metric counters.
+
+The cache emulates the bounded buffer pool of a disk-based index: pages
+enter on miss, recency-ordered, evicting the coldest once over capacity.
+Because the store file is append-only, a page id's content is immutable
+— the cache is never invalidated, even across manifest swaps (a
+refreshed generation references *new* page ids for rewritten clusters).
+
+``CacheStats`` carries two families of counters:
+
+  * cache-level IO: requests / hits / misses (= actual page reads) /
+    evictions / rows gathered — the buffer-pool story;
+  * per-query serving metrics recorded by the executor: unique pages
+    touched and candidate rows refined per query — the paper's headline
+    cost model (page accesses per query), surfaced in
+    ``BENCH_serving.json`` alongside q/s.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+import numpy as np
+
+DEFAULT_CACHE_PAGES = 4096
+
+
+@dataclass
+class CacheStats:
+    # buffer-pool counters
+    requests: int = 0
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    rows_gathered: int = 0
+    # per-query serving metrics (executor-recorded)
+    batches: int = 0
+    queries: int = 0
+    pages_touched: int = 0      # Σ over queries of unique pages accessed
+    candidates: int = 0         # Σ over queries of rows fetched for refine
+
+    def record_queries(self, pages_per_query, cand_per_query) -> None:
+        self.batches += 1
+        self.queries += len(pages_per_query)
+        self.pages_touched += int(np.sum(pages_per_query))
+        self.candidates += int(np.sum(cand_per_query))
+
+    def snapshot(self) -> dict:
+        q = max(self.queries, 1)
+        return {
+            "requests": self.requests, "hits": self.hits,
+            "misses": self.misses, "evictions": self.evictions,
+            "rows_gathered": self.rows_gathered,
+            "hit_rate": round(self.hits / max(self.requests, 1), 4),
+            "batches": self.batches, "queries": self.queries,
+            "pages_per_query": round(self.pages_touched / q, 2),
+            "candidates_per_query": round(self.candidates / q, 2),
+        }
+
+    def reset(self) -> None:
+        for f in ("requests", "hits", "misses", "evictions",
+                  "rows_gathered", "batches", "queries", "pages_touched",
+                  "candidates"):
+            setattr(self, f, 0)
+
+
+@dataclass
+class LRUPageCache:
+    """page id → (rows_per_page, d) f64 block, recency-ordered.
+
+    ``capacity_pages=None`` means unbounded (useful for warm replicas
+    that are expected to fault the whole working set in once).
+    ``access`` keeps a per-page hit counter — the store's "access
+    counters", e.g. for spotting hot extents.
+    """
+
+    capacity_pages: int | None = DEFAULT_CACHE_PAGES
+    _pages: OrderedDict = field(default_factory=OrderedDict)
+    access: dict = field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return len(self._pages)
+
+    def touch(self, pid: int) -> bool:
+        """Mark ``pid`` accessed; True when resident (LRU bump)."""
+        self.access[pid] = self.access.get(pid, 0) + 1
+        if pid in self._pages:
+            self._pages.move_to_end(pid)
+            return True
+        return False
+
+    def peek(self, pid: int) -> np.ndarray | None:
+        """Resident page block without recency/counter side effects."""
+        return self._pages.get(pid)
+
+    def put(self, pid: int, block: np.ndarray) -> int:
+        """Insert a page; returns how many pages were evicted."""
+        self._pages[pid] = block
+        self._pages.move_to_end(pid)
+        evicted = 0
+        if self.capacity_pages is not None:
+            while len(self._pages) > self.capacity_pages:
+                self._pages.popitem(last=False)
+                evicted += 1
+        return evicted
+
+    def clear(self) -> None:
+        """Drop every resident page (access counters are kept — they
+        describe the workload, not the residency)."""
+        self._pages.clear()
+
+    def hottest(self, n: int = 10) -> list:
+        """(page id, access count) for the n most-accessed pages."""
+        return sorted(self.access.items(), key=lambda kv: -kv[1])[:n]
+
+
+__all__ = ["LRUPageCache", "CacheStats", "DEFAULT_CACHE_PAGES"]

@@ -1,0 +1,284 @@
+"""The paged store: append-only mmap file of cluster extents.
+
+Writer (``spill_rows``): lays each cluster's ``n_max`` slot rows (f64,
+mapped-value order — the order the learned positions predict) into a
+contiguous extent of fixed-size pages inside a single ``pages.bin``.
+Incremental spills reuse the extents of clusters whose row bytes are
+unchanged (sha1 in the manifest) and *append* extents for dirty ones;
+the new generation is published with one atomic manifest swap
+(``repro.storage.manifest``).  The file is never rewritten in place, so
+live readers — and their page caches — stay valid across swaps.
+
+Reader (``PagedStore``): a read-only ``np.memmap`` over the page file
+plus an LRU page cache with access counters.  ``fetch`` takes an
+``IOPlan`` (deduplicated, run-coalesced page list from the IO-batch
+scheduler) and reads each missing run as one sequential slice;
+``gather`` returns the f64 rows for a set of flat slot ids through the
+cache, which is both the Pallas-refinement input (cast to f32 — the
+same cast the resident snapshot applies) and the exact f64 refinement
+input, so store-backed results are bit-identical to the in-memory path.
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import os
+import threading
+
+import numpy as np
+
+from .cache import DEFAULT_CACHE_PAGES, CacheStats, LRUPageCache
+from .layout import DEFAULT_PAGE_BYTES, PageLayout, rows_per_page
+from .manifest import FORMAT_VERSION, PAGES_NAME, Manifest, write_atomic
+from .scheduler import IOPlan, page_runs
+
+
+def _cluster_hashes(rows64: np.ndarray) -> list:
+    return [hashlib.sha1(np.ascontiguousarray(rows64[k]).tobytes())
+            .hexdigest() for k in range(rows64.shape[0])]
+
+
+def spill_rows(root: str, rows64: np.ndarray,
+               page_bytes: int = DEFAULT_PAGE_BYTES,
+               meta_arrays: dict | None = None) -> Manifest:
+    """Write (or incrementally refresh) the paged row store under ``root``.
+
+    ``rows64``: (K, n_max, d) f64 cluster-major slot rows.  When a
+    compatible manifest already exists, unchanged clusters keep their
+    extents and only dirty clusters append new pages ("retrained
+    clusters write back as new page extents"); otherwise every cluster
+    gets a fresh extent (still append-only).  ``meta_arrays`` (optional)
+    lands in a generation-stamped ``meta-<gen>.npz`` referenced by the
+    manifest, published together by the atomic manifest swap.
+    """
+    K, n_max, d = rows64.shape
+    rows64 = np.ascontiguousarray(rows64, dtype=np.float64)
+    os.makedirs(root, exist_ok=True)
+    prev = Manifest.load(root) if Manifest.exists(root) else None
+    rpp = rows_per_page(page_bytes, d)
+    reusable = (prev is not None and prev.n_max == n_max and prev.d == d
+                and prev.rows_per_page == rpp and prev.K == K)
+    if prev is not None and not reusable and (prev.d != d or
+                                              prev.rows_per_page != rpp):
+        raise ValueError(
+            "store geometry changed (d or page size); spill to a fresh "
+            "directory instead of mixing record formats in one file")
+    hashes = _cluster_hashes(rows64)
+    ppc = -(-n_max // rpp)
+    next_page = prev.total_pages if prev is not None else 0
+    extents, dirty = [], []
+    for k in range(K):
+        if reusable and prev.cluster_sha1[k] == hashes[k]:
+            extents.append(prev.extents[k])
+        else:
+            extents.append(next_page)
+            dirty.append(k)
+            next_page += ppc
+
+    pages_path = os.path.join(root, PAGES_NAME)
+    stride_rows = ppc * rpp
+    with open(pages_path, "r+b" if prev is not None else "wb") as f:
+        for k in dirty:
+            block = np.zeros((stride_rows, d), np.float64)
+            block[:n_max] = rows64[k]
+            f.seek(extents[k] * rpp * d * 8)
+            f.write(block.tobytes())
+        f.flush()
+        os.fsync(f.fileno())
+
+    gen = prev.generation + 1 if prev is not None else 0
+    meta_file = ""
+    if meta_arrays is not None:
+        meta_file = f"meta-{gen}.npz"
+        buf = io.BytesIO()
+        np.savez(buf, **meta_arrays)
+        write_atomic(os.path.join(root, meta_file), buf.getvalue())
+    man = Manifest(version=FORMAT_VERSION, generation=gen,
+                   page_bytes=page_bytes, rows_per_page=rpp, d=d,
+                   n_max=n_max, K=K, total_pages=next_page,
+                   extents=extents, cluster_sha1=hashes,
+                   meta_file=meta_file or (prev.meta_file if prev else ""))
+    man.save(root)
+    # prune stale metas, but never one a live manifest can reference:
+    # the one just published (possibly carried forward from an older
+    # generation) or the previous manifest's (a reader that loaded it
+    # moments ago must still find its meta)
+    keep = {man.meta_file} | ({prev.meta_file} if prev else set())
+    for name in os.listdir(root):
+        if name.startswith("meta-") and name.endswith(".npz") \
+                and name not in keep:
+            g = int(name[5:-4])
+            if g < gen - 1:
+                os.unlink(os.path.join(root, name))
+    return man
+
+
+def load_meta(root: str) -> tuple[dict, Manifest]:
+    """Read the manifest and its generation's metadata arrays."""
+    man = Manifest.load(root)
+    if not man.meta_file:
+        raise FileNotFoundError(f"store at {root!r} has no metadata file")
+    with np.load(os.path.join(root, man.meta_file)) as z:
+        meta = {k: z[k] for k in z.files}
+    return meta, man
+
+
+class PagedStore:
+    """mmap reader over a spilled store: page cache + IO accounting."""
+
+    def __init__(self, root: str,
+                 cache_pages: int | None = DEFAULT_CACHE_PAGES):
+        self.root = root
+        self.manifest = Manifest.load(root)
+        self.cache = LRUPageCache(cache_pages)
+        self.stats = CacheStats()
+        # serializes cache/mmap mutation: executors share one reader
+        # across concurrent lock-free query threads (the resident path's
+        # immutability argument doesn't cover the page cache), so page
+        # IO is the one place store-mode queries serialize.  Reentrant —
+        # gather() fetches missing pages under its own lock.
+        self._lock = threading.RLock()
+        self._mm: np.memmap | None = None
+        self._map()
+
+    def _map(self) -> None:
+        man = self.manifest
+        self.layout: PageLayout = man.layout()
+        n_rows = man.total_pages * man.rows_per_page
+        self._mm = np.memmap(os.path.join(self.root, man.pages_file),
+                             dtype="<f8", mode="r",
+                             shape=(max(n_rows, 1), man.d))
+
+    @property
+    def generation(self) -> int:
+        return self.manifest.generation
+
+    def refresh(self) -> "PagedStore":
+        """Adopt the latest published manifest (after a writer swap).
+
+        Append-only page ids make this trivially safe: cached pages stay
+        byte-valid, a rewritten cluster simply references new ids.
+        """
+        with self._lock:
+            man = Manifest.load(self.root)
+            if man.generation != self.manifest.generation:
+                self.manifest = man
+                self._map()
+        return self
+
+    # ------------------------------------------------------------------ io
+    def fetch_pages(self, pages: np.ndarray) -> None:
+        """Ensure ``pages`` are cached; missing ones read as runs."""
+        with self._lock:
+            st = self.stats
+            missing = []
+            for pid in np.asarray(pages, dtype=np.int64):
+                pid = int(pid)
+                st.requests += 1
+                if self.cache.touch(pid):
+                    st.hits += 1
+                else:
+                    missing.append(pid)
+            rpp = self.layout.rows_per_page
+            for a, b in page_runs(np.asarray(missing, np.int64)):
+                block = np.array(self._mm[a * rpp:b * rpp],
+                                 dtype=np.float64)
+                for j, pid in enumerate(range(a, b)):
+                    st.evictions += self.cache.put(
+                        pid, block[j * rpp:(j + 1) * rpp])
+                st.misses += b - a
+
+    def fetch(self, plan: IOPlan) -> None:
+        """Execute an IO-batch plan: each deduped page read at most once
+        (and not at all when cache-resident)."""
+        self.fetch_pages(plan.pages)
+
+    def gather(self, slots: np.ndarray,
+               layout: PageLayout | None = None) -> np.ndarray:
+        """(len(slots), d) f64 rows for flat slot ids, through the cache.
+
+        ``layout`` maps slots for a specific store generation (a
+        ``StoreView`` passes its frozen one); default is the current
+        manifest's.  Pages already resident are *not* re-counted as
+        cache requests — the buffer-pool stats reflect the planned
+        fetches, while gather is the data access behind them (only a
+        page evicted between fetch and gather costs a genuine re-read).
+        """
+        lay = layout if layout is not None else self.layout
+        slots = np.asarray(slots, dtype=np.int64)
+        out = np.empty((len(slots), lay.d), np.float64)
+        if len(slots) == 0:
+            return out
+        with self._lock:
+            pages, offs = lay.slot_locations(slots)
+            missing = [int(p) for p in np.unique(pages)
+                       if self.cache.peek(p) is None]
+            if missing:
+                self.fetch_pages(np.asarray(missing, np.int64))
+            order = np.argsort(pages, kind="stable")
+            sp, so = pages[order], offs[order]
+            bounds = np.concatenate(
+                [[0], np.nonzero(np.diff(sp))[0] + 1, [len(sp)]])
+            for a, b in zip(bounds[:-1], bounds[1:]):
+                block = self.cache.peek(int(sp[a]))
+                if block is None:           # evicted under tiny capacity
+                    self.fetch_pages(sp[a:a + 1])
+                    block = self.cache.peek(int(sp[a]))
+                out[order[a:b]] = block[so[a:b]]
+            self.stats.rows_gathered += len(slots)
+        return out
+
+    def view(self, layout: PageLayout | None = None) -> "StoreView":
+        """Freeze a generation's layout into a view (what a snapshot
+        binds to — see ``StoreView``); default is the current one."""
+        return StoreView(self, layout)
+
+    def record_queries(self, pages_per_query, cand_per_query) -> None:
+        """Record per-query serving metrics under the store lock (the
+        executor is shared across lock-free query threads; unsynchronized
+        read-modify-writes would lose counts)."""
+        with self._lock:
+            self.stats.record_queries(pages_per_query, cand_per_query)
+
+    def read_cluster(self, k: int) -> np.ndarray:
+        """(n_max, d) f64 bulk read of one cluster extent (no cache —
+        used by the resident loader, not the query path)."""
+        a, b = self.layout.cluster_file_rows(k)
+        return np.array(self._mm[a:b], dtype=np.float64)
+
+    def nbytes_file(self) -> int:
+        return os.path.getsize(os.path.join(self.root,
+                                            self.manifest.pages_file))
+
+
+class StoreView:
+    """One snapshot's binding to a ``PagedStore``: the generation's
+    layout frozen at bind time.
+
+    The reader is shared and mutable (``refresh()`` adopts newer
+    manifests so a serving engine reuses one warm cache across
+    generations), but a snapshot's slot ids are only meaningful under
+    the extents of *its* generation — so each snapshot gathers through
+    a view that captured them.  Append-only page ids keep an old view's
+    extents byte-valid in the file (and in the cache) after any number
+    of later writebacks, which is exactly what lets an in-flight batch
+    on a pre-swap executor finish correctly.
+    """
+
+    def __init__(self, store: PagedStore, layout: PageLayout | None = None):
+        self.base = store
+        # an explicit layout pins a specific generation (the snapshot
+        # loader passes the one matching the metadata it just read, so a
+        # concurrent writeback between the two reads can't mismatch them)
+        self.layout = layout if layout is not None else store.layout
+
+    def gather(self, slots: np.ndarray) -> np.ndarray:
+        return self.base.gather(slots, layout=self.layout)
+
+    def __getattr__(self, name):
+        # everything generation-agnostic (fetch, stats, cache,
+        # manifest, generation, nbytes_file, ...) delegates
+        return getattr(self.base, name)
+
+
+__all__ = ["PagedStore", "StoreView", "spill_rows", "load_meta"]

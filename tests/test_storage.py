@@ -1,0 +1,314 @@
+"""Paged storage tier correctness (DESIGN.md §7).
+
+Covers the acceptance properties: snapshot spill/load round trip is
+bit-identical (structures AND range/kNN results, including after a
+retrain's incremental manifest swap), the store-backed executor returns
+results bit-identical to the in-memory path on both CI legs (the
+``ShardedExecutor`` degrades or shards exactly as usual — only the row
+payloads move to disk), the IO-batch scheduler dedupes and coalesces
+page fetches, the LRU cache stays exact under eviction pressure, and
+``ServingEngine`` serves cold-start from a spilled directory and writes
+retrained clusters back as new page extents.
+"""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import LIMSIndex, MetricSpace, ServingEngine
+from repro.core.executor import QueryExecutor, ShardedExecutor
+from repro.core.metrics import dist_one_to_many
+from repro.core.snapshot import LIMSSnapshot
+from repro.data.datasets import gauss_mix
+from repro.storage import (Manifest, PageLayout, page_runs, plan_batch,
+                           rows_per_page)
+
+N, D = 1600, 6
+
+
+@pytest.fixture(scope="module")
+def setup(tmp_path_factory):
+    X = gauss_mix(N, D, seed=7)
+    sp = MetricSpace(X, "l2")
+    ix = LIMSIndex(sp, n_clusters=6, m=3, n_rings=10)
+    snap = LIMSSnapshot.build(ix)
+    path = str(tmp_path_factory.mktemp("store"))
+    snap.spill(path)
+    return X, ix, snap, path
+
+
+def _queries(X, n_q, seed=2, scale=0.004):
+    rng = np.random.default_rng(seed)
+    return X[rng.choice(len(X), n_q)] + rng.normal(0, scale, (n_q, D))
+
+
+def _radii(X, Q, sel=0.02):
+    return np.array([float(np.quantile(dist_one_to_many(q, X, "l2"), sel))
+                     for q in Q])
+
+
+def _assert_snapshots_equal(a: LIMSSnapshot, b: LIMSSnapshot):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        assert np.array_equal(np.asarray(la), np.asarray(lb))
+    assert (a.K, a.m, a.n_rings, a.n_max, a.live) == \
+        (b.K, b.m, b.n_rings, b.n_max, b.live)
+    assert np.array_equal(a.gids_np, b.gids_np)
+    assert np.array_equal(a.rows_np, b.rows_np)
+    assert np.array_equal(a.valid_np, b.valid_np)
+
+
+# ----------------------------------------------------------- layout/plan
+def test_layout_math_and_alignment():
+    rpp = rows_per_page(4096, 8)            # 64 f64 records of d=8
+    assert rpp == 64
+    assert rows_per_page(65536, 8) == 1024  # > 128 rows → 128-aligned
+    assert rows_per_page(65536, 7) % 128 == 0
+    lay = PageLayout(page_bytes=512, rows_per_page=8, d=8, n_max=20,
+                     extents=(0, 3, 10))
+    assert lay.pages_per_cluster == 3       # ceil(20/8)
+    # slot 0 of cluster 1 starts at its extent; slot 19 is in its 3rd page
+    pages, offs = lay.slot_locations(np.array([20, 39, 45]))
+    assert pages.tolist() == [3, 5, 10] and offs.tolist() == [0, 3, 5]
+
+
+def test_scheduler_dedupes_and_coalesces():
+    lay = PageLayout(page_bytes=512, rows_per_page=8, d=8, n_max=16,
+                     extents=(0, 2))
+    cand = np.zeros((2, 32), bool)
+    cand[0, [0, 1, 9]] = True          # cluster 0, pages 0 and 1
+    cand[1, [1, 16, 31]] = True        # shares page 0; cluster 1 pages 2+3
+    plan = plan_batch(cand, lay)
+    assert plan.pages.tolist() == [0, 1, 2, 3]      # deduped across queries
+    assert plan.runs == ((0, 4),)                   # coalesced to one run
+    assert plan.pages_per_query.tolist() == [2, 3]
+    assert plan.cand_per_query.tolist() == [3, 3]
+    assert page_runs(np.array([0, 1, 5, 7, 8])) == ((0, 2), (5, 6), (7, 9))
+
+
+# ------------------------------------------------------------- round trip
+def test_spill_load_resident_roundtrip(setup):
+    X, ix, snap, path = setup
+    loaded = LIMSSnapshot.load(path)
+    assert loaded.store is None
+    _assert_snapshots_equal(snap, loaded)
+
+
+def test_spill_is_atomic_no_temp_litter(setup):
+    _, _, _, path = setup
+    assert Manifest.exists(path)
+    assert not [f for f in os.listdir(path) if ".tmp" in f]
+
+
+def test_store_backed_results_bit_identical(setup):
+    """The acceptance criterion: range and kNN through the paged store
+    equal the in-memory executor bit for bit.  Runs the sharded wrapper
+    so the 4-fake-device CI legs exercise the sharded candidate mask
+    over a store-backed snapshot."""
+    X, ix, snap, path = setup
+    mem = QueryExecutor(snap)
+    st = ShardedExecutor(LIMSSnapshot.load(path, store=True))
+    assert st.snap.store is not None
+    Q = _queries(X, 8, seed=3)
+    rs = _radii(X, Q)
+    rs[0] = 1e-12                               # provably empty query
+    a = mem.range_query_batch(Q, rs)
+    b = st.range_query_batch(Q, rs)
+    assert len(b[0][0]) == 0
+    for (ai, ad), (bi, bd) in zip(a, b):
+        assert np.array_equal(ai, bi)
+        assert np.array_equal(ad, bd)
+    ids_a, ds_a = mem.knn_query_batch(Q, 6)
+    ids_b, ds_b = st.knn_query_batch(Q, 6)
+    assert np.array_equal(ids_a, ids_b) and np.array_equal(ds_a, ds_b)
+    # k > live clamps identically (the store driver must terminate too)
+    ids_a, ds_a = mem.knn_query_batch(Q[:2], N + 99)
+    ids_b, ds_b = st.knn_query_batch(Q[:2], N + 99)
+    assert ids_b.shape == (2, N)
+    assert np.array_equal(ids_a, ids_b) and np.array_equal(ds_a, ds_b)
+
+
+def test_store_reports_page_and_candidate_counts(setup):
+    X, ix, snap, path = setup
+    ex = QueryExecutor(LIMSSnapshot.load(path, store=True))
+    Q = _queries(X, 5, seed=9)
+    ex.range_query_batch(Q, _radii(X, Q))
+    stats = ex.snap.store.stats.snapshot()
+    assert stats["queries"] == 5
+    assert stats["pages_per_query"] > 0
+    assert stats["candidates_per_query"] > 0
+    assert stats["requests"] == stats["hits"] + stats["misses"]
+    # a single batch on a cold cache is all misses: the gather behind a
+    # planned fetch must not re-count resident pages as hits
+    assert stats["hits"] == 0 and stats["misses"] == stats["requests"]
+    io = ex.last_io
+    assert io["pages"] <= ex.snap.store.manifest.total_pages
+    assert len(io["pages_per_query"]) == 5
+    # candidate pages are a fraction of the corpus: the learned positions
+    # narrow IO (the paper's point) — batch union strictly under a scan
+    assert io["pages"] < ex.snap.store.manifest.total_pages
+
+
+def test_lru_eviction_stays_exact(setup):
+    """A 4-page cache thrashes constantly; results must not change and
+    the counters must stay consistent."""
+    X, ix, snap, path = setup
+    tiny = QueryExecutor(LIMSSnapshot.load(path, store=True, cache_pages=4))
+    mem = QueryExecutor(snap)
+    Q = _queries(X, 6, seed=11)
+    rs = _radii(X, Q)
+    a = mem.range_query_batch(Q, rs)
+    b = tiny.range_query_batch(Q, rs)
+    for (ai, ad), (bi, bd) in zip(a, b):
+        assert np.array_equal(ai, bi) and np.array_equal(ad, bd)
+    st = tiny.snap.store
+    assert len(st.cache) <= 4
+    assert st.stats.evictions > 0
+    assert st.stats.requests == st.stats.hits + st.stats.misses
+
+
+# ----------------------------------------------------- serving + writeback
+def test_serving_paged_writeback_and_extent_reuse(tmp_path):
+    """A refresh after updates publishes a new generation atomically;
+    clusters whose row bytes are unchanged keep their extents, dirty
+    ones append new pages (append-only file — the reader's cache and any
+    concurrent reader's mmap stay valid)."""
+    X = gauss_mix(1200, D, seed=5)
+    ix = LIMSIndex(MetricSpace(X, "l2"), n_clusters=5, m=3, n_rings=10)
+    path = str(tmp_path / "store")
+    se = ServingEngine(ix, refresh_every=0, storage="paged",
+                       storage_path=path)
+    man0 = Manifest.load(path)
+    assert se.executor.snap.store is not None
+    # a delete only flips validity (metadata): row bytes unchanged
+    # everywhere → every extent reused.  Target the smallest cluster so
+    # the later retrain can't shrink the global n_max (full rewrite).
+    victim = int(np.argmin([ci.n for ci in ix.clusters]))
+    dead = int(ix.clusters[victim].store_ids[0])
+    assert se.delete(X[dead]) == 1
+    se.refresh()
+    man1 = Manifest.load(path)
+    assert man1.generation == man0.generation + 1
+    assert man1.extents == man0.extents
+    assert man1.total_pages == man0.total_pages
+    # retrain the dirtied cluster: it drops the tombstone, so its rows
+    # change — exactly its extent is rewritten (appended)
+    se.retrain_cluster(victim)          # refresh_every=0 gates auto-refresh
+    se.refresh()                        # → trigger manually
+    man2 = Manifest.load(path)
+    assert man2.generation > man1.generation
+    assert man2.n_max == man1.n_max     # smallest cluster can't set n_max
+    changed = [k for k in range(man2.K)
+               if man2.extents[k] != man1.extents[k]]
+    assert changed == [victim]
+    assert man2.total_pages > man1.total_pages
+    # post-writeback results still match the host exactly
+    Q = _queries(X, 6, seed=13)
+    rs = _radii(X, Q)
+    for (ids, ds), q, r in zip(se.range_query_batch(Q, rs), Q, rs):
+        h_ids, h_ds, _ = ix.range_query(q, r)
+        assert set(map(int, ids)) == set(map(int, h_ids))
+        np.testing.assert_allclose(np.sort(ds), np.sort(h_ds), atol=0)
+    # and a fresh resident load of the swapped store round-trips the
+    # current snapshot bit-for-bit (post-retrain manifest swap)
+    _assert_snapshots_equal(LIMSSnapshot.build(ix), LIMSSnapshot.load(path))
+
+
+def test_serving_paged_update_consistency():
+    """Insert/delete/retrain through a paged engine: store-backed batch
+    results stay bit-identical to the host after the refresh folds the
+    updates in (buffer rows included, tombstones excluded)."""
+    rng = np.random.default_rng(0)
+    X = gauss_mix(1100, D, seed=9)
+    ix = LIMSIndex(MetricSpace(X, "l2"), n_clusters=4, m=3, n_rings=8)
+    se = ServingEngine(ix, refresh_every=0, storage="paged")
+    new_rows = X[rng.choice(1100, 12)] + rng.normal(0, 0.02, (12, D))
+    gids = [se.insert(r) for r in new_rows]
+    assert se.delete(X[3]) == 1
+    assert se.delete(new_rows[0]) == 1
+    se.retrain_cluster(0)
+    se.refresh()
+    Q = np.concatenate([new_rows[:3], X[rng.choice(1100, 3)]]) \
+        + rng.normal(0, 0.003, (6, D))
+    rs = _radii(X, Q)
+    for (ids, ds), q, r in zip(se.range_query_batch(Q, rs), Q, rs):
+        h_ids, h_ds, _ = ix.range_query(q, r)
+        assert set(map(int, ids)) == set(map(int, h_ids))
+        np.testing.assert_allclose(np.sort(ds), np.sort(h_ds), atol=0)
+    ids, ds = se.knn_query_batch(Q, 5)
+    for b, q in enumerate(Q):
+        h_ids, h_ds, _ = ix.knn_query(q, 5)
+        np.testing.assert_allclose(np.sort(ds[b]), np.sort(h_ds), atol=0)
+    hit_ids, _ = se.range_query(new_rows[1], 1e-9)
+    assert gids[1] in set(map(int, hit_ids))
+    dead_ids, _ = se.range_query(new_rows[0], 1e-9)
+    assert gids[0] not in set(map(int, dead_ids))
+
+
+def test_inflight_executor_survives_writeback(tmp_path):
+    """An executor serving generation g must keep returning generation-g
+    results after refreshes publish later generations into the same
+    store: its ``StoreView`` froze g's extents, and append-only page ids
+    keep them byte-valid — the engine's contract that an in-flight batch
+    finishes on its consistent snapshot extends to the storage tier."""
+    X = gauss_mix(1000, D, seed=3)
+    ix = LIMSIndex(MetricSpace(X, "l2"), n_clusters=4, m=3, n_rings=8)
+    se = ServingEngine(ix, refresh_every=0, storage="paged",
+                       storage_path=str(tmp_path / "s"))
+    old_ex = se.executor
+    Q = _queries(X, 5, seed=23)
+    rs = _radii(X, Q)
+    before_r = old_ex.range_query_batch(Q, rs)
+    before_k = old_ex.knn_query_batch(Q, 5)
+    rng = np.random.default_rng(1)
+    for row in X[rng.choice(1000, 8)] + rng.normal(0, 0.02, (8, D)):
+        se.insert(row)
+    for c in range(ix.K):            # rewrite every cluster's extent
+        se.retrain_cluster(c)
+    se.refresh()
+    assert se.executor is not old_ex
+    after_r = old_ex.range_query_batch(Q, rs)
+    for (ai, ad), (bi, bd) in zip(before_r, after_r):
+        assert np.array_equal(ai, bi) and np.array_equal(ad, bd)
+    after_k = old_ex.knn_query_batch(Q, 5)
+    assert np.array_equal(before_k[0], after_k[0])
+    assert np.array_equal(before_k[1], after_k[1])
+
+
+def test_cold_start_from_spill(setup):
+    """A replica cold-starts from the spilled directory: serves exact
+    results immediately, is read-only until an index is attached, and
+    keeps its warm page cache across the first refresh."""
+    X, ix, snap, path = setup
+    cold = ServingEngine.from_spill(path)
+    warm = QueryExecutor(snap)
+    Q = _queries(X, 5, seed=17)
+    rs = _radii(X, Q)
+    a = warm.range_query_batch(Q, rs)
+    b = cold.range_query_batch(Q, rs)
+    for (ai, ad), (bi, bd) in zip(a, b):
+        assert np.array_equal(ai, bi) and np.array_equal(ad, bd)
+    ids_a, ds_a = warm.knn_query_batch(Q, 4)
+    ids_b, ds_b = cold.knn_query_batch(Q, 4)
+    assert np.array_equal(ids_a, ids_b) and np.array_equal(ds_a, ds_b)
+    assert cold.store.stats.misses > 0          # pages faulted in on demand
+    with pytest.raises(RuntimeError, match="read-only"):
+        cold.insert(X[0])
+    with pytest.raises(RuntimeError, match="read-only"):
+        cold.refresh()
+    cold.attach_index(ix)
+    store_before = cold.store
+    cold.refresh()
+    assert cold.store is store_before           # warm reader carried over
+    b2 = cold.range_query_batch(Q, rs)
+    for (ai, ad), (bi, bd) in zip(a, b2):
+        assert np.array_equal(ai, bi) and np.array_equal(ad, bd)
+
+
+def test_geometry_mismatch_rejected(setup):
+    """Mixing record formats in one store file must be refused."""
+    X, ix, snap, path = setup
+    with pytest.raises(ValueError, match="geometry"):
+        snap.spill(path, page_bytes=64)         # different rows_per_page
