@@ -1,15 +1,33 @@
-"""Layer 2 of the serving stack: kernel-pipeline execution over a snapshot.
+"""Layer 2 of the serving stack: plan *execution* over a snapshot.
 
-``QueryExecutor`` owns the device pipeline (``pdist`` → ``rankeval`` →
-``range_filter``) over one immutable ``LIMSSnapshot`` plus the host-side
-exact-search drivers (batched range, batch-wide growing-radius kNN).
-``ShardedExecutor`` runs the same pipeline cluster-sharded across devices
-with ``shard_map`` over a mesh from ``repro.sharding.logical``: each
-device holds a contiguous shard of clusters, TriPrune routes every query
-per shard (a device only evaluates its own clusters' ring boxes), and
-per-shard results come back through ``jax.lax`` collectives / sharded
-out-specs.  Cluster-granular sharding preserves exactness for free —
-pivot tables, rank models and the certified error bound are all strictly
+The query path is split plan/execute (DESIGN.md §8): ``repro.core.planner``
+builds one :class:`~repro.core.planner.CandidatePlan` per query batch —
+certified candidate masks, cluster routing and the growing-radius
+schedule, derived purely from snapshot metadata — and this module
+executes it through one of two backends:
+
+  * ``_ResidentBackend`` — the in-memory kernel pipeline.  Range applies
+    the fused L2-ball prefilter to the plan's device mask; kNN runs the
+    *entire* growing-radius schedule inside one compiled
+    ``lax.while_loop`` with per-query done flags, so a batch costs O(1)
+    host syncs no matter how many rounds it takes (the counter is
+    recorded in ``last_knn`` and asserted in tests).
+  * ``_PagedBackend`` — the storage tier.  The plan's masks become
+    IO-batched page runs; because round t+1's radius is known from the
+    schedule before round t's refinement finishes, the backend can hand
+    the next round's IOPlan to an async prefetcher
+    (``REPRO_PREFETCH=async``) that overlaps page IO with kernel
+    refinement.
+
+``QueryExecutor`` owns the single-device pipeline; ``ShardedExecutor``
+runs the same plan math cluster-sharded with ``shard_map`` over a mesh
+from ``repro.sharding.logical``: each device holds a contiguous shard of
+clusters, TriPrune routes every query per shard, and the kNN loop keeps
+its per-round reductions on device — candidate counts via ``psum`` and
+the k-th distance via a shard-local ``top_k`` merged with
+``all_gather`` over (B, k)-sized blocks, never the full distance
+matrix.  Cluster-granular sharding preserves exactness for free — pivot
+tables, rank models and the certified error bound are all strictly
 per-cluster state (DESIGN.md §4).
 
 With one visible device ``ShardedExecutor`` degrades to the plain
@@ -18,14 +36,16 @@ second CI job forces 4 host devices (``--xla_force_host_platform_device_count``)
 to run the real ``shard_map`` path.
 
 Exactness contract: both executors return results bit-identical to the
-host ``LIMSIndex`` — the device kernels only ever produce a certified
-*superset* of candidates (error-widened ring box, inflated f32 guard
-bands), and the final refinement recomputes true f64 distances on the
-host (DESIGN.md §3).
+host ``LIMSIndex`` — the plan's masks are a certified *superset* of
+candidates (error-widened ring box, inflated f32 guard bands), kNN
+rounds only certify once the k-th ball provably fits inside the queried
+radius minus the guard band, and the final refinement recomputes true
+f64 distances on the host (DESIGN.md §3, §8).
 """
 from __future__ import annotations
 
 import functools
+import threading
 from types import SimpleNamespace
 
 import numpy as np
@@ -37,16 +57,12 @@ from jax.experimental.shard_map import shard_map
 
 from ..kernels import ops
 from ..sharding.logical import default_rules, serving_mesh, spec_for
-from ..storage import plan_batch
+from ..storage import PagePrefetcher, plan_batch, prefetch_mode
 from .metrics import dist_one_to_many
+from .planner import (_BALL_ABS, _R_REL, _SEED_REL, CandidatePlan, Planner,
+                      plan_arrays)
 from .snapshot import _DEVICE_FIELDS, LIMSSnapshot
 
-# f32 guard bands: rank math and distances run in f64 on the host; the
-# device path inflates radii so rounding can never exclude a true result
-# (the final f64 refinement removes the extras).
-_R_REL = 1e-5       # relative radius inflation for the ring box
-_R_ABS = 1e-4       # absolute radius inflation for the ring box
-_BALL_ABS = 1e-3    # absolute inflation for the distance-ball prefilter
 # padding rows for bucketed store-mode kernel launches: far outside any
 # ball, large but finite so f32 arithmetic stays NaN-free
 _FAR = np.float32(1e30)
@@ -69,88 +85,355 @@ def _pad_bucket(rows32: np.ndarray, min_rows: int = 128) -> np.ndarray:
     return np.concatenate([rows32, pad])
 
 
-def _candidate_mask_arrays(qf, rf, snap: LIMSSnapshot, n_rings: int):
-    """(B, K·n_max) candidate mask — the pure device math, written against
-    a (possibly shard-local) snapshot pytree so the single-device executor
-    and every ``shard_map`` shard run literally the same code.
+# ---------------------------------------------------------------------------
+# device-resident kNN rounds: the whole growing-radius schedule is one
+# compiled loop — seed, rounds, certification and the exact-fallback all
+# trace into a single executable, so a batch syncs to host exactly once
+# ---------------------------------------------------------------------------
+def _smallest_k(dm, k: int):
+    """(B, k) smallest values per row, ascending — exact.
 
-    One ``pdist`` launch gives query→pivot distances (TriPrune +
-    AreaLocate inputs); one ``rankeval`` launch evaluates all K·m rank
-    models on the lo/hi annulus boundaries of the whole batch, laid out
-    (G, 2B); the predicted ring box is widened by the certified per-group
-    rank-error bound so it is a guaranteed superset of the host's box.
+    Inside jit, XLA CPU lowers ``lax.top_k`` through a generic sort path
+    roughly 40× slower than its eager dispatch (measured: 1.2s vs 31ms
+    on a (64, 92k) f32 operand), which would dominate the compiled kNN
+    loop.  For the small k the loop certifies with, k successive masked
+    argmin sweeps are exact (ties consume one occurrence per sweep) and
+    lower to plain fast reductions; large k (the k≈corpus clamp cases,
+    where selection is a minor cost anyway) falls back to ``top_k``."""
+    if k > 64:
+        return -jax.lax.top_k(-dm, k)[0]
+    rows = jnp.arange(dm.shape[0])
+
+    def step(dm, _):
+        i = jnp.argmin(dm, axis=1)
+        v = dm[rows, i]
+        return dm.at[rows, i].set(jnp.inf), v
+
+    _, vs = jax.lax.scan(step, dm, None, length=k)
+    return vs.T                                 # (B, k) ascending
+
+
+
+def _knn_rounds(qf, d2, kth0, r0, snap, n_rings, k_eff, max_rounds,
+                count_sum, kth_select):
+    """The entire certified growing-radius schedule as one
+    ``lax.while_loop`` — the ONE copy of the loop both the single-device
+    and the per-shard caller trace, parameterized only by the two global
+    reductions (``count_sum``: (B, P_local) candidate mask → (B) global
+    counts; ``kth_select``: (B, P_local) masked sq-distances → (B)
+    global k-th smallest).  ``kth0`` is the f32 k-th distance (global —
+    the sharded caller merges shard-local top-k first), ``r0`` the
+    plan's (B,) f32 pivot-seeded schedule base.
+
+    The start radius skips ahead on the schedule to the first round
+    whose radius covers the k-th distance estimate (``r0·2^t ≥ kth``):
+    executed radii stay on the deterministic schedule the plan
+    advertises, but a well-seeded batch certifies in one round, exactly
+    like the pre-refactor k-th-distance seeding.  Certification is the
+    same guard-band test as ever — enough candidates AND the k-th ball
+    strictly inside the round radius minus the f32 bands — so the
+    certified set is a superset of the closed k-th ball at any radius
+    the schedule visits, and exactness never depends on the seed.
+    Anything the schedule never certifies falls back to the exact full
+    scan of (locally) valid slots.  Returns (final mask, rounds used),
+    both shard-local shapes under ``shard_map``.
     """
+    valid = snap.valid.reshape(-1)
     B = qf.shape[0]
-    K, n_max, m = snap.rids.shape
-    d = snap.rows.shape[-1]
-    N = n_rings
-    r_g = rf * (1.0 + _R_REL) + _R_ABS                      # (B,)
-    dq = jnp.sqrt(jnp.maximum(
-        ops.pdist(qf, snap.pivots.reshape(K * m, d)), 0.0))
-    dqr = dq.reshape(B, K, m)
-    # TriPrune, per query per (local) cluster
-    alive = jnp.all((dqr <= snap.dmax[None] + r_g[:, None, None]) &
-                    (dqr >= snap.dmin[None] - r_g[:, None, None]),
-                    axis=-1) & (snap.ns[None] > 0)          # (B, K)
-    # one rankeval launch: G groups × (lo | hi) boundaries of all B
-    x = jnp.concatenate([(dq - r_g[:, None]).T,
-                         (dq + r_g[:, None]).T], axis=1)    # (G, 2B)
-    rank, _ = ops.rankeval(
-        x, snap.coef.reshape(K * m, -1), snap.model_lo.reshape(-1),
-        snap.model_hi.reshape(-1), snap.model_n.reshape(-1), n_rings=N)
-    err = snap.rank_err.reshape(-1)[:, None]                # (G, 1)
-    lo_rank = jnp.maximum(rank[:, :B].astype(jnp.float32) - err, 0.0)
-    hi_rank = rank[:, B:].astype(jnp.float32) + err
-    w = snap.width[None, :, None].astype(jnp.float32)
-    rid_lo = jnp.clip(jnp.floor(lo_rank.T.reshape(B, K, m) / w),
-                      0, N - 1).astype(jnp.int32)
-    rid_hi = jnp.clip(jnp.floor(hi_rank.T.reshape(B, K, m) / w),
-                      0, N - 1).astype(jnp.int32)
-    box = jnp.all((snap.rids[None] >= rid_lo[:, :, None, :]) &
-                  (snap.rids[None] <= rid_hi[:, :, None, :]),
-                  axis=-1)                                  # (B, K, n_max)
-    cand = (box & alive[:, :, None] & snap.in_ring[None]) | \
-        snap.always[None]
-    cand = cand & snap.valid[None]
-    return cand.reshape(B, K * n_max)
+    seed = kth0 * (1.0 + _SEED_REL) + _BALL_ABS
+    t0 = jnp.ceil(jnp.log2(jnp.maximum(seed, 1e-30) / r0))
+    r_start = r0 * jnp.exp2(jnp.maximum(t0, 0.0))
+
+    def cond(st):
+        done, r, rounds, final = st
+        return jnp.logical_and(~jnp.all(done), rounds < max_rounds)
+
+    def body(st):
+        done, r, rounds, final = st
+        cand = plan_arrays(qf, r, snap, n_rings)[0]
+        ball = d2 <= ((r * (1.0 + _R_REL) + _BALL_ABS) ** 2)[:, None]
+        candb = cand & ball
+        cnt = count_sum(candb)
+        dm = jnp.where(candb, d2, jnp.inf)
+        kth = jnp.sqrt(jnp.maximum(kth_select(dm), 0.0))
+        ok = (cnt >= k_eff) & (kth <= r * (1.0 - _R_REL) - _BALL_ABS)
+        newly = ok & ~done
+        final = jnp.where(newly[:, None], candb, final)
+        done = done | newly
+        r = jnp.where(done, r, r * 2.0)
+        return done, r, rounds + 1, final
+
+    st0 = (jnp.zeros(B, bool), r_start, jnp.int32(0),
+           jnp.zeros((B, valid.shape[0]), bool))
+    done, _, rounds, final = jax.lax.while_loop(cond, body, st0)
+    final = jnp.where(done[:, None], final, valid[None])
+    return final, rounds
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("n_rings", "k_eff", "max_rounds"))
+def _knn_loop_single(qf, d2, kth0, r0, *arrays, n_rings, k_eff,
+                     max_rounds):
+    """Single-device compiled kNN rounds: (final mask, rounds used).
+
+    ``d2``/``kth0`` (the full valid-masked distance matrix and the f32
+    k-th distance) arrive precomputed from the *eager* kernel path —
+    XLA CPU's eager TopK dispatch is ~40× its jitted lowering, and the
+    seed is loop-invariant anyway, so only per-round work compiles."""
+    snap = SimpleNamespace(**dict(zip(_DEVICE_FIELDS, arrays)))
+    return _knn_rounds(
+        qf, d2, kth0, r0, snap, n_rings, k_eff, max_rounds,
+        count_sum=lambda candb: jnp.sum(candb, axis=1),
+        kth_select=lambda dm: _smallest_k(dm, k_eff)[:, -1])
+
+
+# ---------------------------------------------------------------------------
+# execution backends (both consume the same CandidatePlan)
+# ---------------------------------------------------------------------------
+class _ResidentBackend:
+    """In-memory execution: kernels over the snapshot's device rows."""
+
+    name = "resident"
+
+    def __init__(self, ex: "QueryExecutor"):
+        self.ex = ex
+        self.prefetcher = None          # nothing to prefetch in memory
+
+    def range_hits(self, plan: CandidatePlan) -> np.ndarray:
+        ex = self.ex
+        rf = jnp.asarray(plan.radii, jnp.float32)
+        hits = plan.mask_dev & ex._ball_filter(plan.qf, rf)
+        ex._count_sync()
+        return np.asarray(hits)
+
+    def knn_candidates(self, plan: CandidatePlan):
+        ex = self.ex
+        r0 = jnp.asarray(plan.radii, jnp.float32)
+        final, rounds = ex._knn_device_loop(
+            plan.qf, r0, plan.k, plan.max_rounds)
+        final, rounds = jax.device_get((final, rounds))
+        ex._count_sync()
+        return np.asarray(final, bool), int(rounds)
+
+
+class _PagedBackend:
+    """Storage-tier execution: the plan's masks drive page IO.
+
+    Round t's certified mask becomes a deduplicated, run-coalesced
+    ``IOPlan``; rows are gathered through the snapshot's generation-bound
+    ``StoreView`` and refined with the same kernels (power-of-two row
+    bucketing keeps compile churn bounded).  With a prefetcher attached
+    (``REPRO_PREFETCH=async``), round t+1's IOPlan — known from the
+    schedule before round t's refinement starts — is fetched on a
+    background thread while the kernels run, so the next round's fetch
+    finds its pages already resident (DESIGN.md §8).
+    """
+
+    name = "paged"
+
+    def __init__(self, ex: "QueryExecutor", prefetch: str | None = None):
+        self.ex = ex
+        mode = prefetch_mode() if prefetch is None else str(prefetch).lower()
+        self.prefetcher = PagePrefetcher(ex.snap.store) \
+            if mode == "async" else None
+
+    # ------------------------------------------------------------- range
+    def range_hits(self, plan: CandidatePlan) -> np.ndarray:
+        """Same candidate mask as the resident path, ball prefilter on
+        gathered pages.  Per-pair kernel math is independent of which
+        other rows share a launch and the gathered f32 rows are the same
+        downcast the resident snapshot holds, so the mask is identical
+        to the in-memory path (DESIGN.md §7)."""
+        ex = self.ex
+        store = ex.snap.store
+        cand = plan.mask
+        io = plan_batch(cand, store.layout)
+        store.fetch(io)
+        rf = jnp.asarray(plan.radii, jnp.float32)
+        hits = np.zeros_like(cand)
+        if len(io.slots):
+            rows64 = store.gather(io.slots)
+            ball, _ = ops.range_filter(
+                plan.qf, jnp.asarray(_pad_bucket(rows64.astype(np.float32))),
+                rf * (1.0 + _R_REL) + _BALL_ABS)
+            ball = np.asarray(ball, bool)[:, :len(io.slots)]
+            ex._count_sync()
+            hits[:, io.slots] = cand[:, io.slots] & ball
+        store.record_queries(io.pages_per_query, io.cand_per_query)
+        ex.last_io = io.summary()
+        return hits
+
+    # --------------------------------------------------------------- kNN
+    def knn_candidates(self, plan: CandidatePlan):
+        """Growing-radius rounds whose IO is the candidate pages.
+
+        Each round evaluates the plan's schedule mask for the whole
+        batch, fetches only pages not yet resident (the scheduler
+        dedupes; earlier rounds' pages are cache hits — Alg. 2's
+        never-re-read-a-page contract), computes f32 distances on the
+        newly gathered rows with the same ``pdist`` kernel, and
+        certifies per query with the resident loop's exact guard-band
+        test.  The certified set is a superset of the closed k-th ball
+        — ``_refine_topk`` therefore returns results bit-identical to
+        the in-memory executor (DESIGN.md §7)."""
+        ex = self.ex
+        s = ex.snap
+        store = s.store
+        pf = self.prefetcher
+        qf = plan.qf
+        B, k_eff = plan.B, plan.k
+        r = plan.radii.copy()
+        done = np.zeros(B, bool)
+        final = np.zeros((B, s.n_slots), bool)
+        pos = np.full(s.n_slots, -1, np.int64)   # slot → gathered column
+        d2g = np.empty((B, 0), np.float32)       # sq dists, gathered slots
+        pages_seen = [set() for _ in range(B)]   # per-query IO metric
+        seen = np.zeros((B, s.n_slots), bool)    # per-query fetched cands
+        cand_next = plan.mask                    # round-0 schedule mask
+        ticket = None
+        rounds = 0
+        for t in range(plan.max_rounds):
+            rounds = t + 1
+            cand = cand_next.copy()
+            cand_next = None
+            cand[done] = False        # frozen queries stop driving IO
+            # per_query=False: the pages_seen sets below are this
+            # driver's cross-round page accounting
+            io = plan_batch(cand, store.layout, per_query=False)
+            if pf is not None:
+                pf.note_demand(io.pages, ticket)
+                ticket = None
+            store.fetch(io)
+            # pages(∪ rounds) = ∪ pages(new slots per round): only map
+            # slots not already charged to the query
+            newly = cand & ~seen
+            seen |= cand
+            for b in np.nonzero(newly.any(axis=1))[0]:
+                pages_seen[b].update(store.layout.slot_pages(
+                    np.nonzero(newly[b])[0]).tolist())
+            new = io.slots[pos[io.slots] < 0]
+            if len(new):
+                rows64 = store.gather(new)
+                pos[new] = d2g.shape[1] + np.arange(len(new))
+            # the schedule fixes round t+1's radius before round t's
+            # refinement runs — evaluate its mask now and hand the page
+            # IO of the genuinely new slots (``exclude``: everything
+            # this or an earlier round gathered) to the background
+            # prefetcher, overlapping the kernel work below
+            if pf is not None and t + 1 < plan.max_rounds:
+                spec_r = np.where(done, r, r * 2.0)
+                cand_next = ex.planner.eval_mask(qf, spec_r)
+                spec = cand_next.copy()
+                spec[done] = False
+                pio = plan_batch(spec, store.layout, per_query=False,
+                                 exclude=pos >= 0)
+                ticket = pf.submit(pio.pages)
+            if len(new):
+                d2_new = np.asarray(ops.pdist(
+                    qf, jnp.asarray(_pad_bucket(
+                        rows64.astype(np.float32)))))[:, :len(new)]
+                ex._count_sync()
+                d2g = np.concatenate([d2g, d2_new], axis=1)
+            r32 = np.asarray(r, np.float32)
+            thr = (r32 * np.float32(1.0 + _R_REL) +
+                   np.float32(_BALL_ABS)) ** 2    # f32 guard-band ball
+            cert = r32 * np.float32(1.0 - _R_REL) - np.float32(_BALL_ABS)
+            for b in np.nonzero(~done)[0]:
+                sl = np.nonzero(cand[b])[0]
+                if len(sl) < k_eff:
+                    continue
+                db = d2g[b, pos[sl]]
+                inball = db <= thr[b]
+                if int(inball.sum()) < k_eff:
+                    continue
+                kth = np.sqrt(np.float32(max(
+                    np.partition(db[inball], k_eff - 1)[k_eff - 1], 0.0)))
+                # same certification as the resident loop: the k-th ball
+                # fits strictly inside the round radius minus the f32
+                # guard band
+                if kth <= cert[b]:
+                    final[b, sl[inball]] = True
+                    done[b] = True
+            if done.all():
+                break
+            r = np.where(done, r, r * 2.0)
+            if cand_next is None and t + 1 < plan.max_rounds:
+                cand_next = ex.planner.eval_mask(qf, r)
+        else:
+            final[~done] = s.valid_np[None]       # exact fallback: scan
+            seen[~done] = s.valid_np[None]
+        ppq = [len(p) for p in pages_seen]
+        # candidates = rows fetched for the query across every round
+        # (the union of its candidate sets), matching the range path's
+        # accounting — NOT the smaller certified final set
+        cpq = seen.sum(axis=1)
+        store.record_queries(ppq, cpq)
+        ex.last_io = {"pages": len(set().union(*pages_seen)),
+                      "pages_per_query": ppq,
+                      "candidates_per_query": [int(c) for c in cpq]}
+        if pf is not None:
+            ex.last_io["prefetch"] = pf.snapshot()
+        return final, rounds
+
+
+# ---------------------------------------------------------------------------
+# executors
+# ---------------------------------------------------------------------------
 class QueryExecutor:
-    """Single-device kernel pipeline + exact host drivers over a snapshot.
+    """Single-device plan execution + exact host refinement.
 
     A snapshot carrying a paged store (``snap.store``, DESIGN.md §7)
-    flips the row-touching stages to *store mode*: the candidate mask is
-    computed from resident metadata exactly as before, then the IO-batch
-    scheduler converts it into deduplicated page runs, the store fetches
-    them once per batch, and the Pallas ball prefilter plus the final
-    f64 refinement run on the gathered rows — bit-identical results,
-    page-granular IO (the paper's cost model, finally driven by the
-    learned positions)."""
+    selects the paged backend: candidate masks are computed from
+    resident metadata exactly as in memory, then executed as page-
+    granular IO — bit-identical results, the paper's cost model driven
+    by the learned positions."""
 
-    def __init__(self, snapshot: LIMSSnapshot):
+    def __init__(self, snapshot: LIMSSnapshot, prefetch: str | None = None):
         self.snap = snapshot
+        self.planner = Planner(self)
+        self.backend = _PagedBackend(self, prefetch) \
+            if snapshot.store is not None else _ResidentBackend(self)
         # IO summary of the most recent store-mode batch (None otherwise)
         self.last_io: dict | None = None
+        # {backend, rounds, host_syncs} of the most recent kNN batch
+        # (last-writer-wins under concurrent batches, like last_io)
+        self.last_knn: dict | None = None
+        # per-thread sync counter: executors serve lock-free concurrent
+        # query threads, and one batch's count must not absorb another's
+        self._tls = threading.local()
 
     @property
     def live(self) -> int:
         return self.snap.live
 
+    @property
+    def prefetcher(self):
+        """The backend's async page prefetcher (None unless paged and
+        ``REPRO_PREFETCH=async``)."""
+        return self.backend.prefetcher
+
+    def _count_sync(self) -> None:
+        """One device→host materialization on the query path (the kNN
+        acceptance bar counts these per batch; thread-local, so
+        concurrent batches on a shared executor count independently)."""
+        self._tls.syncs = getattr(self._tls, "syncs", 0) + 1
+
     # ------------------------------------------------------ device stages
     # (the three methods a sharding strategy overrides)
+    def _plan_arrays(self, qf: jax.Array, rf: jax.Array):
+        """((B, P) candidate mask, (B, K) routing) — the plan math."""
+        return plan_arrays(qf, rf, self.snap, self.snap.n_rings)
+
     def _candidate_mask(self, qf: jax.Array, rf: jax.Array) -> jax.Array:
         """(B, P) bool — error-widened ring box ∧ TriPrune ∧ validity."""
-        return _candidate_mask_arrays(qf, rf, self.snap, self.snap.n_rings)
+        return self._plan_arrays(qf, rf)[0]
 
-    def _hits(self, qf: jax.Array, rf: jax.Array):
-        """(B, P) bool — candidates ∧ fused L2-ball prefilter."""
+    def _ball_filter(self, qf: jax.Array, rf: jax.Array) -> jax.Array:
+        """(B, P) bool — fused L2-ball prefilter over resident rows."""
         s = self.snap
-        if s.store is not None:
-            return self._hits_store(qf, rf)
-        cand = self._candidate_mask(qf, rf)
         ball, _ = ops.range_filter(qf, s.rows.reshape(s.n_slots, s.d),
                                    rf * (1.0 + _R_REL) + _BALL_ABS)
-        return cand & ball.astype(bool)
+        return ball.astype(bool)
 
     def _sq_dists(self, qf: jax.Array) -> jax.Array:
         """(B, P) f32 squared distances to every slot, inf where invalid."""
@@ -158,34 +441,26 @@ class QueryExecutor:
         if s.store is not None:
             raise RuntimeError(
                 "store-backed executor never scans every slot; the kNN "
-                "driver routes through _knn_store")
+                "driver routes through the paged backend")
         d2 = ops.pdist(qf, s.rows.reshape(s.n_slots, s.d))
         return jnp.where(s.valid.reshape(-1)[None], d2, jnp.inf)
 
-    # ----------------------------------------------------- storage tier
-    def _hits_store(self, qf: jax.Array, rf: jax.Array) -> np.ndarray:
-        """Store-mode ``_hits``: same candidate mask, ball prefilter on
-        gathered pages.  Per-pair kernel math is independent of which
-        other rows share a launch and the gathered f32 rows are the same
-        downcast the resident snapshot holds, so the mask is identical
-        to the in-memory path (DESIGN.md §7)."""
-        s = self.snap
-        store = s.store
-        cand = np.asarray(self._candidate_mask(qf, rf))
-        plan = plan_batch(cand, store.layout)
-        store.fetch(plan)
-        hits = np.zeros_like(cand)
-        if len(plan.slots):
-            rows64 = store.gather(plan.slots)
-            ball, _ = ops.range_filter(
-                qf, jnp.asarray(_pad_bucket(rows64.astype(np.float32))),
-                rf * (1.0 + _R_REL) + _BALL_ABS)
-            ball = np.asarray(ball, bool)[:, :len(plan.slots)]
-            hits[:, plan.slots] = cand[:, plan.slots] & ball
-        store.record_queries(plan.pages_per_query, plan.cand_per_query)
-        self.last_io = plan.summary()
-        return hits
+    def _knn_device_loop(self, qf, r0, k_eff: int, max_rounds: int):
+        """(final mask, rounds) — the kNN schedule as one executable.
 
+        The loop-invariant pieces (full distance matrix, seed k-th
+        distance) run on the eager kernel path first; only the rounds
+        themselves compile.  No extra host syncs — eager results stay
+        device-resident and feed the jitted loop directly."""
+        d2 = self._sq_dists(qf)
+        kth0 = jnp.sqrt(jnp.maximum(
+            -jax.lax.top_k(-d2, k_eff)[0][:, -1], 0.0))
+        return _knn_loop_single(
+            qf, d2, kth0, r0,
+            *(getattr(self.snap, f) for f in _DEVICE_FIELDS),
+            n_rings=self.snap.n_rings, k_eff=k_eff, max_rounds=max_rounds)
+
+    # ----------------------------------------------------- refinement data
     def _refine_rows(self, idx: np.ndarray) -> np.ndarray:
         """f64 rows for flat slot ids: resident matrix or page gather
         (cache-hot — the prefilter just fetched these pages)."""
@@ -205,9 +480,8 @@ class QueryExecutor:
         Q = np.atleast_2d(np.asarray(Q, np.float64))
         B = Q.shape[0]
         r_arr = np.broadcast_to(np.asarray(r, np.float64), (B,))
-        qf = jnp.asarray(Q, jnp.float32)
-        rf = jnp.asarray(r_arr, jnp.float32)
-        hit = np.asarray(self._hits(qf, rf))
+        plan = self.planner.plan_range(Q, r_arr)
+        hit = self.backend.range_hits(plan)
         out = []
         for b in range(B):
             idx = np.nonzero(hit[b])[0]
@@ -223,13 +497,10 @@ class QueryExecutor:
 
     # --------------------------------------------------------- kNN queries
     def knn_query_batch(self, Q, k: int, max_rounds: int = 64):
-        """Exact batched kNN: one growing-radius loop for the whole batch.
+        """Exact batched kNN: one plan, one backend execution.
 
-        Per-query done flags live on the host; every round runs the full
-        batch through the kernels (queries already done keep their frozen
-        radius — no per-query Python in the loop). ``k`` is clamped to the
-        number of live objects. Returns ``(ids (B, k'), dists (B, k'))``
-        with ``k' = min(k, live)``.
+        ``k`` is clamped to the number of live objects. Returns
+        ``(ids (B, k'), dists (B, k'))`` with ``k' = min(k, live)``.
         """
         s = self.snap
         Q = np.atleast_2d(np.asarray(Q, np.float64))
@@ -237,46 +508,18 @@ class QueryExecutor:
         k_eff = min(int(k), s.live)
         if k_eff <= 0:
             return (np.empty((B, 0), np.int64), np.empty((B, 0)))
-        if s.store is not None:
-            return self._knn_store(Q, k_eff, max_rounds)
-        qf = jnp.asarray(Q, jnp.float32)
-        d2 = self._sq_dists(qf)                             # (B, P)
-        # seed radii at the f32 k-th distance: the loop usually certifies
-        # the ball in one round and only grows on guard-band misses
-        kth0 = jnp.sqrt(jnp.maximum(
-            -jax.lax.top_k(-d2, k_eff)[0][:, -1], 0.0))
-        r = np.asarray(kth0, np.float64) * (1.0 + 1e-3) + _BALL_ABS
-        done = np.zeros(B, bool)
-        final = np.zeros((B, d2.shape[1]), bool)
-        for _ in range(max_rounds):
-            rf = jnp.asarray(r, jnp.float32)
-            cand = self._candidate_mask(qf, rf)
-            ball = d2 <= ((rf * (1.0 + _R_REL) + _BALL_ABS) ** 2)[:, None]
-            candb = cand & ball
-            cnt = jnp.sum(candb, axis=1)
-            dm = jnp.where(candb, d2, jnp.inf)
-            kth = jnp.sqrt(jnp.maximum(
-                -jax.lax.top_k(-dm, k_eff)[0][:, -1], 0.0))
-            # certify: enough candidates AND the k-th ball fits inside the
-            # queried radius with margin for the f32 guard band
-            ok = np.asarray((cnt >= k_eff) &
-                            (kth <= rf * (1.0 - _R_REL) - _BALL_ABS))
-            newly = ok & ~done
-            if newly.any():
-                final[newly] = np.asarray(candb)[newly]
-                done |= newly
-            if done.all():
-                break
-            r = np.where(done, r, r * 2.0)
-        else:
-            final[~done] = s.valid_np[None]       # exact fallback: scan
+        self._tls.syncs = 0
+        plan = self.planner.plan_knn(Q, k_eff, max_rounds)
+        final, rounds = self.backend.knn_candidates(plan)
+        self.last_knn = {"backend": self.backend.name, "k": k_eff,
+                         "rounds": rounds, "host_syncs": self._tls.syncs}
         return self._refine_topk(Q, final, k_eff)
 
     def _refine_topk(self, Q, final: np.ndarray, k_eff: int):
         """Exact f64 refinement of the certified candidate sets: the
-        shared tail of both kNN drivers.  ``final`` is a superset of the
+        shared tail of both kNN backends.  ``final`` is a superset of the
         closed k-th ball per query, so the stable distance sort selects
-        the same k results whichever driver produced it."""
+        the same k results whichever backend produced it."""
         s = self.snap
         B = Q.shape[0]
         ids_out = np.empty((B, k_eff), np.int64)
@@ -289,101 +532,6 @@ class QueryExecutor:
             d_out[b] = d_true[sel]
         return ids_out, d_out
 
-    def _knn_store(self, Q: np.ndarray, k_eff: int, max_rounds: int):
-        """Store-mode batched kNN: growing-radius rounds whose IO is the
-        candidate pages, not a full scan.
-
-        Each round runs the resident-metadata candidate mask for the
-        whole batch, fetches only pages not yet gathered (the scheduler
-        dedupes; earlier rounds' pages are cache hits — Alg. 2's
-        never-re-read-a-page contract), computes f32 distances on the
-        newly gathered rows with the same ``pdist`` kernel, and
-        certifies per query with the in-memory driver's exact guard-band
-        test.  The certified set is a superset of the closed k-th ball
-        — ``_refine_topk`` therefore returns results bit-identical to
-        the in-memory executor (DESIGN.md §7)."""
-        s = self.snap
-        store = s.store
-        B = Q.shape[0]
-        qf = jnp.asarray(Q, jnp.float32)
-        K, n_max, m = s.rids.shape
-        # seed radii at the nearest-pivot distance: pivots are data rows,
-        # so the seed ball is non-empty and doubling reaches the k-th
-        # ball in O(log) rounds.  Clusters with no live slots (deleted
-        # out, or the inert padding a sharded snapshot carries) hold
-        # zero/stale pivot rows — mask them so they can't collapse the
-        # seed below any real point's distance
-        dq = np.asarray(jnp.sqrt(jnp.maximum(
-            ops.pdist(qf, s.pivots.reshape(K * m, s.d)), 0.0)))
-        live_k = s.valid_np.reshape(K, n_max).any(axis=1)       # (K,)
-        dqm = np.where(np.repeat(live_k, m)[None], dq, np.inf)
-        r = dqm.min(axis=1).astype(np.float64) * (1.0 + 1e-3) + _BALL_ABS
-        done = np.zeros(B, bool)
-        final = np.zeros((B, s.n_slots), bool)
-        pos = np.full(s.n_slots, -1, np.int64)    # slot → gathered column
-        d2g = np.empty((B, 0), np.float32)        # sq dists, gathered slots
-        pages_seen = [set() for _ in range(B)]    # per-query IO metric
-        seen = np.zeros((B, s.n_slots), bool)     # per-query fetched cands
-        for _ in range(max_rounds):
-            rf = jnp.asarray(r, jnp.float32)
-            cand = np.array(self._candidate_mask(qf, rf))
-            cand[done] = False            # frozen queries stop driving IO
-            # per_query=False: the pages_seen sets below are this
-            # driver's cross-round page accounting
-            plan = plan_batch(cand, store.layout, per_query=False)
-            store.fetch(plan)
-            # pages(∪ rounds) = ∪ pages(new slots per round): only map
-            # slots not already charged to the query
-            newly = cand & ~seen
-            seen |= cand
-            for b in np.nonzero(newly.any(axis=1))[0]:
-                pages_seen[b].update(store.layout.slot_pages(
-                    np.nonzero(newly[b])[0]).tolist())
-            new = plan.slots[pos[plan.slots] < 0]
-            if len(new):
-                rows64 = store.gather(new)
-                d2_new = np.asarray(ops.pdist(
-                    qf, jnp.asarray(_pad_bucket(
-                        rows64.astype(np.float32)))))[:, :len(new)]
-                pos[new] = d2g.shape[1] + np.arange(len(new))
-                d2g = np.concatenate([d2g, d2_new], axis=1)
-            r32 = np.asarray(rf)
-            thr = (r32 * np.float32(1.0 + _R_REL) +
-                   np.float32(_BALL_ABS)) ** 2    # f32 guard-band ball
-            cert = r32 * np.float32(1.0 - _R_REL) - np.float32(_BALL_ABS)
-            for b in np.nonzero(~done)[0]:
-                sl = np.nonzero(cand[b])[0]
-                if len(sl) < k_eff:
-                    continue
-                db = d2g[b, pos[sl]]
-                inball = db <= thr[b]
-                if int(inball.sum()) < k_eff:
-                    continue
-                kth = np.sqrt(np.float32(max(
-                    np.partition(db[inball], k_eff - 1)[k_eff - 1], 0.0)))
-                # same certification as the in-memory driver: the k-th
-                # ball fits strictly inside the queried radius minus the
-                # f32 guard band
-                if kth <= cert[b]:
-                    final[b, sl[inball]] = True
-                    done[b] = True
-            if done.all():
-                break
-            r = np.where(done, r, r * 2.0)
-        else:
-            final[~done] = s.valid_np[None]       # exact fallback: scan
-            seen[~done] = s.valid_np[None]
-        ppq = [len(p) for p in pages_seen]
-        # candidates = rows fetched for the query across every round
-        # (the union of its candidate sets), matching the range path's
-        # accounting — NOT the smaller certified final set
-        cpq = seen.sum(axis=1)
-        store.record_queries(ppq, cpq)
-        self.last_io = {"pages": len(set().union(*pages_seen)),
-                        "pages_per_query": ppq,
-                        "candidates_per_query": [int(c) for c in cpq]}
-        return self._refine_topk(Q, final, k_eff)
-
     def knn_query(self, q, k: int):
         """Single-query convenience wrapper over the batch engine."""
         ids, dists = self.knn_query_batch(np.asarray(q)[None], k)
@@ -394,20 +542,21 @@ class ShardedExecutor(QueryExecutor):
     """Cluster-sharded executor: ``shard_map`` over a device mesh.
 
     The snapshot's K clusters are padded to a multiple of the mesh's
-    ``data`` extent and split on the cluster axis; every device traces the
-    *same* ``_candidate_mask_arrays`` body over its shard-local snapshot.
-    Queries are replicated (in-spec ``P()``); per-shard hit masks come
-    back sharded on the candidate axis (out-spec ``P(None, 'data')`` —
-    the gather XLA inserts is an all-gather over the mesh), while the kNN
-    distance pass gathers explicitly with ``jax.lax.all_gather`` so the
-    seeding top-k sees the full corpus on every device.
+    ``data`` extent and split on the cluster axis; every device traces
+    the *same* ``plan_arrays`` body over its shard-local snapshot.
+    Queries are replicated (in-spec ``P()``); per-shard plan masks come
+    back sharded on the candidate axis (out-spec ``P(None, 'data')``),
+    and the compiled kNN loop runs *inside* ``shard_map`` — per-round
+    candidate counts merge with ``psum`` and the k-th distance with a
+    shard-local ``top_k`` + ``all_gather`` over (B, k) blocks, so
+    neither seeding nor rounds ever gather the full distance matrix.
 
     With one device (plain tier-1 CI) no mesh is built and the class
     behaves exactly like ``QueryExecutor``.
     """
 
     def __init__(self, snapshot: LIMSSnapshot, mesh: Mesh | None = None,
-                 axis: str = "data"):
+                 axis: str = "data", prefetch: str | None = None):
         if mesh is None:
             mesh = serving_mesh()
         self.mesh = mesh
@@ -415,7 +564,7 @@ class ShardedExecutor(QueryExecutor):
         self.n_shards = int(mesh.shape[axis]) if axis in mesh.axis_names \
             else 1
         if self.n_shards <= 1:
-            super().__init__(snapshot)
+            super().__init__(snapshot, prefetch=prefetch)
             return
         K_pad = -(-snapshot.K // self.n_shards) * self.n_shards
         snapshot = snapshot.pad_clusters(K_pad)
@@ -429,100 +578,150 @@ class ShardedExecutor(QueryExecutor):
         snapshot = jax.tree_util.tree_unflatten(
             treedef, [jax.device_put(a, NamedSharding(mesh, sp))
                       for a, sp in zip(leaves, specs)])
-        super().__init__(snapshot)
+        super().__init__(snapshot, prefetch=prefetch)
         self._dev_arrays = tuple(
             getattr(snapshot, f) for f in _DEVICE_FIELDS)
-        self._cand_fn, self._hits_fn, self._sq_fn = _sharded_pipeline(
+        self._specs = specs
+        self._plan_fn, self._ball_fn = _sharded_pipeline(
             mesh, axis, snapshot.n_rings, specs)
 
     # sharded device stages (same host drivers as the base class).  In
-    # store mode only the candidate mask runs sharded — the ball
-    # prefilter and refinement happen on host-gathered pages, so those
-    # stages delegate to the base class (which routes them through the
-    # store; the mask it requests still dispatches back here).
-    def _candidate_mask(self, qf, rf):
+    # store mode only the plan math runs sharded — the ball prefilter
+    # and refinement happen on host-gathered pages, so those stages
+    # never dispatch here (the paged backend only asks for plan masks).
+    def _plan_arrays(self, qf, rf):
         if self.n_shards <= 1:
-            return super()._candidate_mask(qf, rf)
-        return self._cand_fn(qf, rf, *self._dev_arrays)
+            return super()._plan_arrays(qf, rf)
+        return self._plan_fn(qf, rf, *self._dev_arrays)
 
-    def _hits(self, qf, rf):
+    def _ball_filter(self, qf, rf):
         if self.n_shards <= 1 or self.snap.store is not None:
-            return super()._hits(qf, rf)
-        return self._hits_fn(qf, rf, *self._dev_arrays)
+            return super()._ball_filter(qf, rf)
+        return self._ball_fn(qf, rf, *self._dev_arrays)
 
-    def _sq_dists(self, qf):
-        if self.n_shards <= 1 or self.snap.store is not None:
-            return super()._sq_dists(qf)
-        return self._sq_fn(qf, *self._dev_arrays)
+    # NOTE: no _sq_dists override — the full (B, P) distance matrix is
+    # only ever needed by the single-device loop's eager seeding; the
+    # sharded kNN loop replaced PR-2's all_gather of it with in-loop
+    # shard-local top-k merges (the base method's eager jnp still
+    # assembles the matrix correctly from the sharded rows if some
+    # residual caller asks).
+
+    def _knn_device_loop(self, qf, r0, k_eff: int, max_rounds: int):
+        if self.n_shards <= 1:
+            return super()._knn_device_loop(qf, r0, k_eff, max_rounds)
+        fn = _sharded_knn_loop(self.mesh, self.axis, self.snap.n_rings,
+                               self._specs, k_eff, max_rounds)
+        return fn(qf, r0, *self._dev_arrays)
+
+
+def _local_view(arrays) -> SimpleNamespace:
+    """Attribute view of the snapshot's device arrays (flatten order =
+    ``_DEVICE_FIELDS``): inside ``shard_map`` every leading extent is
+    shard-local, and ``plan_arrays`` derives all shapes from the arrays
+    themselves."""
+    return SimpleNamespace(**dict(zip(_DEVICE_FIELDS, arrays)))
 
 
 @functools.lru_cache(maxsize=32)
 def _sharded_pipeline(mesh: Mesh, axis: str, n_rings: int, specs: tuple):
-    """Build the (cand, hits, sq) jitted ``shard_map`` pipeline.
+    """Build the (plan, ball) jitted ``shard_map`` pipeline.
 
     Cached on (mesh, axis, n_rings, specs) — all hashable — so a
     ``ServingEngine`` refresh that swaps in a same-shaped snapshot reuses
     the previous generation's compiled pipeline instead of retracing on
     the first post-swap batch (``jax.jit`` then keys on array shapes as
     usual; only a snapshot whose padded shapes actually changed pays a
-    retrace).  The bodies take the snapshot's device arrays positionally
-    (flatten order = ``_DEVICE_FIELDS``) and rebuild an attribute view
-    per shard: inside ``shard_map`` every leading extent is shard-local,
-    and ``_candidate_mask_arrays`` derives all shapes from the arrays
-    themselves.
+    retrace).
     """
     rep = P()                        # queries/radii: replicated per shard
 
-    def local(arrays) -> SimpleNamespace:
-        return SimpleNamespace(**dict(zip(_DEVICE_FIELDS, arrays)))
-
-    def cand_body(qf, rf, *arrays):
+    def plan_body(qf, rf, *arrays):
         # shard-local TriPrune routing: this device evaluates only its
         # own clusters' ring boxes for every query in the batch
-        return _candidate_mask_arrays(qf, rf, local(arrays), n_rings)
+        return plan_arrays(qf, rf, _local_view(arrays), n_rings)
 
-    def hits_body(qf, rf, *arrays):
-        snap = local(arrays)
-        cand = _candidate_mask_arrays(qf, rf, snap, n_rings)
+    def ball_body(qf, rf, *arrays):
+        snap = _local_view(arrays)
         # the ops wrappers trace with shard-local shapes here, so their
         # tile policy sizes blocks to the per-device slice automatically
         ball, _ = ops.range_filter(
             qf, snap.rows.reshape(-1, snap.rows.shape[-1]),
             rf * (1.0 + _R_REL) + _BALL_ABS)
-        return cand & ball.astype(bool)
-
-    def sq_body(qf, *arrays):
-        snap = local(arrays)
-        d2 = ops.pdist(qf, snap.rows.reshape(-1, snap.rows.shape[-1]))
-        d2 = jnp.where(snap.valid.reshape(-1)[None], d2, jnp.inf)
-        # explicit collective: every shard ends up holding the full
-        # (B, P) distance matrix, in cluster-shard order, so the kNN
-        # radius seeding (global top-k) needs no host-side stitching
-        return jax.lax.all_gather(d2, axis, axis=1, tiled=True)
+        return ball.astype(bool)
 
     out_sharded = P(None, axis)
     return (
-        jax.jit(shard_map(cand_body, mesh=mesh,
+        jax.jit(shard_map(plan_body, mesh=mesh,
+                          in_specs=(rep, rep) + specs,
+                          out_specs=(out_sharded, out_sharded),
+                          check_rep=False)),
+        jax.jit(shard_map(ball_body, mesh=mesh,
                           in_specs=(rep, rep) + specs,
                           out_specs=out_sharded, check_rep=False)),
-        jax.jit(shard_map(hits_body, mesh=mesh,
-                          in_specs=(rep, rep) + specs,
-                          out_specs=out_sharded, check_rep=False)),
-        jax.jit(shard_map(sq_body, mesh=mesh, in_specs=(rep,) + specs,
-                          out_specs=P(None, None), check_rep=False)),
     )
 
 
+@functools.lru_cache(maxsize=64)
+def _sharded_knn_loop(mesh: Mesh, axis: str, n_rings: int, specs: tuple,
+                      k_eff: int, max_rounds: int):
+    """Compiled cluster-sharded kNN rounds: the whole growing-radius
+    schedule inside one ``shard_map``.
+
+    Every per-round reduction stays a collective: candidate counts via
+    ``psum``, the k-th distance via shard-local ``top_k`` merged with an
+    ``all_gather`` of (B, min(k, P_local)·n_shards) blocks — the full
+    (B, P) distance matrix is never gathered, for seeding or rounds
+    (PR-2's seeding all-gathered it).  ``done``/radii stay replicated
+    because every shard computes identical global reductions, so the
+    loop needs no host round-trips at all; the certified masks come
+    back cluster-sharded and reassemble through the out-spec.
+    """
+    rep = P()
+
+    def body(qf, r0, *arrays):
+        snap = _local_view(arrays)
+        valid_l = snap.valid.reshape(-1)
+        n_local = valid_l.shape[0]
+        kl = min(k_eff, n_local)     # shard-local top-k width
+        d2 = ops.pdist(qf, snap.rows.reshape(n_local, -1))
+        d2 = jnp.where(valid_l[None], d2, jnp.inf)
+
+        def merged_kth(dm):
+            """Global k-th smallest of (B, P_local) per-shard values:
+            local top-k, gather the (B, kl) blocks, re-select.  Unlike
+            the single-device loop, ``lax.top_k`` is the fast selection
+            here — XLA lowers it well on the shard-local operands, and
+            the ``_smallest_k`` sweeps measure ~4× slower in this
+            position (both were benchmarked; keep whichever wins)."""
+            loc = -jax.lax.top_k(-dm, kl)[0]                 # (B, kl)
+            allk = jax.lax.all_gather(loc, axis, axis=1,
+                                      tiled=True)            # (B, kl·S)
+            return -jax.lax.top_k(-allk, k_eff)[0][:, -1]
+
+        kth0 = jnp.sqrt(jnp.maximum(merged_kth(d2), 0.0))
+        return _knn_rounds(
+            qf, d2, kth0, r0, snap, n_rings, k_eff, max_rounds,
+            count_sum=lambda candb: jax.lax.psum(
+                jnp.sum(candb, axis=1), axis),
+            kth_select=merged_kth)
+
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=(rep, rep) + specs,
+                             out_specs=(P(None, axis), P()),
+                             check_rep=False))
+
+
 def make_executor(snapshot: LIMSSnapshot, *, sharded: bool | None = None,
-                  mesh: Mesh | None = None) -> QueryExecutor:
+                  mesh: Mesh | None = None,
+                  prefetch: str | None = None) -> QueryExecutor:
     """Executor factory: ``sharded=None`` auto-shards when the process
     sees more than one device (or a mesh is given), else stays on the
-    plain single-device pipeline."""
+    plain single-device pipeline.  ``prefetch`` pins the paged backend's
+    prefetch mode ("async"/"off"; None → ``REPRO_PREFETCH``)."""
     if sharded is None:
         sharded = mesh is not None or jax.device_count() > 1
     if sharded:
-        return ShardedExecutor(snapshot, mesh=mesh)
-    return QueryExecutor(snapshot)
+        return ShardedExecutor(snapshot, mesh=mesh, prefetch=prefetch)
+    return QueryExecutor(snapshot, prefetch=prefetch)
 
 
 __all__ = ["QueryExecutor", "ShardedExecutor", "make_executor"]

@@ -60,8 +60,12 @@ class ServingEngine:
                  storage_path: str | None = None,
                  page_bytes: int = DEFAULT_PAGE_BYTES,
                  cache_pages: int | None = DEFAULT_CACHE_PAGES,
+                 prefetch: str | None = None,
                  _initial: QueryExecutor | None = None):
         self._index = index
+        # paged executors overlap kNN rounds' page IO with refinement
+        # when "async" (None defers to REPRO_PREFETCH; DESIGN.md §8)
+        self._prefetch = prefetch
         self._refresh_every = int(refresh_every)
         # online retrains route through the device builder (repro.build;
         # DESIGN.md §6) whenever the kernels compile — on real
@@ -113,6 +117,7 @@ class ServingEngine:
     def from_spill(cls, path: str, *, index: LIMSIndex | None = None,
                    sharded: bool | None = None, mesh: Mesh | None = None,
                    cache_pages: int | None = DEFAULT_CACHE_PAGES,
+                   prefetch: str | None = None,
                    **kw) -> "ServingEngine":
         """Cold-start a serving replica from a spilled snapshot directory.
 
@@ -124,12 +129,13 @@ class ServingEngine:
         background).  With ``index``, refreshes write back to ``path``.
         """
         snap = LIMSSnapshot.load(path, store=True, cache_pages=cache_pages)
-        ex = make_executor(snap, sharded=sharded, mesh=mesh)
+        ex = make_executor(snap, sharded=sharded, mesh=mesh,
+                           prefetch=prefetch)
         # refresh writebacks must keep the on-disk page geometry
         kw.setdefault("page_bytes", snap.store.manifest.page_bytes)
         return cls(index, storage="paged", storage_path=path,
                    sharded=sharded, mesh=mesh, cache_pages=cache_pages,
-                   _initial=ex, **kw)
+                   prefetch=prefetch, _initial=ex, **kw)
 
     def attach_index(self, index: LIMSIndex) -> None:
         """Give a cold-started engine its mutable host index (updates and
@@ -162,7 +168,8 @@ class ServingEngine:
                 # swap can never remap an in-flight batch's slots.
                 self._store.refresh()
             snap = snap.with_store(self._store)
-        return make_executor(snap, sharded=self._sharded, mesh=self._mesh)
+        return make_executor(snap, sharded=self._sharded, mesh=self._mesh,
+                             prefetch=self._prefetch)
 
     @property
     def index(self) -> LIMSIndex | None:
@@ -232,6 +239,18 @@ class ServingEngine:
             self.pending_mutations += self._refresh_every
             pending = self.pending_mutations
         self._maybe_refresh(pending)
+
+    def compact(self):
+        """Reclaim the paged store's garbage extents: rewrite live
+        extents into a fresh pages file and swap manifests atomically
+        (``PagedStore.compact``).  Serialized with updates/refreshes via
+        the update lock — queries never block, and executors serving the
+        pre-compaction generation keep their file pinned through their
+        ``StoreView``.  No-op (returns None) when serving resident."""
+        if self._store is None:
+            return None
+        with self._update_lock:
+            return self._store.compact()
 
     def _maybe_refresh(self, pending: int) -> None:
         if self._refresh_every and pending >= self._refresh_every:

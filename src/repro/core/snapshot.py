@@ -293,13 +293,15 @@ class LIMSSnapshot:
         kw = {f: jnp.asarray(meta[f]) for f in _SPILL_FIELDS}
         if isinstance(store, StoreView):
             store = store.base
-        # the view's layout comes from the SAME manifest read as the
-        # metadata above — a writeback landing between the two reads
-        # would otherwise pair generation-G arrays with G+1 extents
+        # the view's (layout, pages file) pair comes from the SAME
+        # manifest read as the metadata above — a writeback (or
+        # compaction) landing between the two reads would otherwise pair
+        # generation-G arrays with G+1 extents
         if isinstance(store, PagedStore):
-            ps = store.refresh().view(man.layout())
+            ps = store.refresh().view(man.layout(), man.pages_file)
         elif store:
-            ps = PagedStore(path, cache_pages=cache_pages).view(man.layout())
+            ps = PagedStore(path, cache_pages=cache_pages).view(
+                man.layout(), man.pages_file)
         else:
             ps = None
         if ps is not None:

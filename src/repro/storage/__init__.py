@@ -7,10 +7,13 @@ order — ``layout``), an atomic JSON manifest (``manifest``), and the
 snapshot's non-row arrays; serving reads it through a ``PagedStore``
 (mmap + LRU page cache with access counters — ``cache``/``store``)
 driven by the IO-batch scheduler (``scheduler``), which turns the
-executor's certified candidate sets into deduplicated sequential page
-runs fetched once per query batch.  DESIGN.md §7 is the full story,
-including why store-backed results stay bit-identical to the resident
-path.
+executor's certified candidate plans into deduplicated sequential page
+runs fetched once per query batch, and — under ``REPRO_PREFETCH=async``
+— by the background prefetcher (``prefetch``), which overlaps upcoming
+kNN rounds' page IO with kernel refinement.  ``PagedStore.compact()``
+reclaims the garbage extents append-only writebacks leave behind.
+DESIGN.md §7–§8 are the full story, including why store-backed results
+stay bit-identical to the resident path.
 
 ``REPRO_STORAGE=paged`` flips the default serving surfaces
 (``BatchedLIMS``, ``ServingEngine``) to spill-and-serve through this
@@ -23,6 +26,7 @@ import os
 from .cache import DEFAULT_CACHE_PAGES, CacheStats, LRUPageCache
 from .layout import DEFAULT_PAGE_BYTES, PageLayout, rows_per_page
 from .manifest import Manifest, write_atomic
+from .prefetch import PagePrefetcher, PrefetchTicket, prefetch_mode
 from .scheduler import IOPlan, page_runs, plan_batch
 from .store import PagedStore, StoreView, load_meta, spill_rows
 
@@ -34,7 +38,8 @@ def storage_mode() -> str:
 
 __all__ = [
     "CacheStats", "DEFAULT_CACHE_PAGES", "DEFAULT_PAGE_BYTES", "IOPlan",
-    "LRUPageCache", "Manifest", "PageLayout", "PagedStore", "StoreView",
-    "load_meta", "page_runs", "plan_batch", "rows_per_page", "spill_rows",
+    "LRUPageCache", "Manifest", "PageLayout", "PagePrefetcher",
+    "PagedStore", "PrefetchTicket", "StoreView", "load_meta", "page_runs",
+    "plan_batch", "prefetch_mode", "rows_per_page", "spill_rows",
     "storage_mode", "write_atomic",
 ]

@@ -2,9 +2,12 @@
 
 The cache emulates the bounded buffer pool of a disk-based index: pages
 enter on miss, recency-ordered, evicting the coldest once over capacity.
-Because the store file is append-only, a page id's content is immutable
-— the cache is never invalidated, even across manifest swaps (a
-refreshed generation references *new* page ids for rewritten clusters).
+Pages are keyed by ``(pages file, page id)``: within one file page ids
+are append-only and their content immutable, so the cache is never
+invalidated — not across manifest swaps (a refreshed generation
+references *new* page ids for rewritten clusters) and not across
+compactions (a compacted generation lives in a *new* file, so its
+restarted page ids can never collide with a pinned view's old ones).
 
 ``CacheStats`` carries two families of counters:
 
@@ -66,7 +69,7 @@ class CacheStats:
 
 @dataclass
 class LRUPageCache:
-    """page id → (rows_per_page, d) f64 block, recency-ordered.
+    """(file, page id) → (rows_per_page, d) f64 block, recency-ordered.
 
     ``capacity_pages=None`` means unbounded (useful for warm replicas
     that are expected to fault the whole working set in once).

@@ -10,10 +10,14 @@ A spilled snapshot directory holds
 else first (append new page extents, write the new meta file, fsync),
 then publish with a single ``os.replace`` of the manifest — a reader
 either sees the previous complete generation or the new complete
-generation, never a torn state.  Because ``pages.bin`` is append-only,
-page ids are immutable once written: a page cache keyed on page id never
-needs invalidation across generations, and a crashed writer leaves at
-worst unreferenced garbage pages.
+generation, never a torn state.  Because a pages file is append-only,
+page ids are immutable once written: a page cache keyed on
+(file, page id) never needs invalidation across generations, and a
+crashed writer leaves at worst unreferenced garbage pages.  Compaction
+(``PagedStore.compact``) reclaims that garbage by switching
+``pages_file`` to a freshly rewritten ``pages-<gen>.bin`` in the same
+atomic swap; generation-bound views keep the retired file's name (and
+mmap) so their page ids stay meaningful.
 
 ``cluster_sha1`` lets an incremental writer skip clusters whose row
 bytes are unchanged (their extents carry over; only dirty clusters cost

@@ -63,7 +63,8 @@ class IOPlan:
 
 
 def plan_batch(cand: np.ndarray, layout: PageLayout,
-               per_query: bool = True) -> IOPlan:
+               per_query: bool = True,
+               exclude: np.ndarray | None = None) -> IOPlan:
     """Plan the page fetch for a (B, P) bool candidate mask.
 
     Every page is listed once no matter how many queries (or how many
@@ -71,9 +72,13 @@ def plan_batch(cand: np.ndarray, layout: PageLayout,
     the store turns them into sequential reads.  ``per_query=False``
     skips the per-query unique-page accounting (a caller that tracks
     pages across rounds itself — the kNN driver — avoids paying the
-    slot→page mapping twice per round).
+    slot→page mapping twice per round).  ``exclude`` (a (P,) bool mask)
+    drops slots whose rows the caller already holds — the speculative
+    prefetch plan for round t+1 covers only IO round t hasn't done.
     """
     cand = np.asarray(cand, dtype=bool)
+    if exclude is not None:
+        cand = cand & ~np.asarray(exclude, dtype=bool)[None]
     B = cand.shape[0]
     slots = np.nonzero(cand.any(axis=0))[0].astype(np.int64)
     pages = np.unique(layout.slot_pages(slots)) if len(slots) \

@@ -22,8 +22,8 @@ from repro.core.executor import QueryExecutor, ShardedExecutor
 from repro.core.metrics import dist_one_to_many
 from repro.core.snapshot import LIMSSnapshot
 from repro.data.datasets import gauss_mix
-from repro.storage import (Manifest, PageLayout, page_runs, plan_batch,
-                           rows_per_page)
+from repro.storage import (Manifest, PageLayout, PagedStore, page_runs,
+                           plan_batch, rows_per_page)
 
 N, D = 1600, 6
 
@@ -312,3 +312,206 @@ def test_geometry_mismatch_rejected(setup):
     X, ix, snap, path = setup
     with pytest.raises(ValueError, match="geometry"):
         snap.spill(path, page_bytes=64)         # different rows_per_page
+
+
+# -------------------------------------------------------------- compaction
+def test_compact_reclaims_garbage_extents(tmp_path):
+    """Repeated retrain writebacks append new extents and orphan the old
+    ones; ``compact()`` rewrites the live extents into a fresh pages
+    file (atomic manifest swap) and the garbage is reclaimed — while an
+    executor bound to the pre-compaction generation keeps serving
+    bit-identically through its ``StoreView`` (old file unlinked, bytes
+    pinned by its mmap)."""
+    X = gauss_mix(1000, D, seed=21)
+    ix = LIMSIndex(MetricSpace(X, "l2"), n_clusters=4, m=3, n_rings=8)
+    path = str(tmp_path / "store")
+    se = ServingEngine(ix, refresh_every=0, storage="paged",
+                       storage_path=path)
+    Q = _queries(X, 5, seed=31)
+    rs = _radii(X, Q)
+    old_ex = se.executor
+    before_r = old_ex.range_query_batch(Q, rs)
+    before_k = old_ex.knn_query_batch(Q, 5)
+    rng = np.random.default_rng(7)
+    for _ in range(2):                  # two dirty writeback generations
+        for row in X[rng.choice(1000, 6)] + rng.normal(0, 0.02, (6, D)):
+            se.insert(row)
+        se.retrain_cluster(0)
+        se.refresh()
+    man_dirty = Manifest.load(path)
+    live_pages = man_dirty.K * man_dirty.layout().pages_per_cluster
+    assert man_dirty.total_pages > live_pages       # garbage accumulated
+    size_dirty = se.store.nbytes_file()
+    man_c = se.compact()
+    assert man_c.generation == man_dirty.generation + 1
+    assert man_c.total_pages == live_pages          # dense again
+    assert man_c.pages_file != man_dirty.pages_file
+    assert se.store.nbytes_file() < size_dirty      # bytes reclaimed
+    assert not os.path.exists(os.path.join(path, man_dirty.pages_file))
+    # compaction moved rows, not results: current, pre-compaction and
+    # freshly loaded readers all still serve exactly
+    for (ids, ds), q, r in zip(se.range_query_batch(Q, rs), Q, rs):
+        h_ids, h_ds, _ = ix.range_query(q, r)
+        assert set(map(int, ids)) == set(map(int, h_ids))
+    after_r = old_ex.range_query_batch(Q, rs)
+    for (ai, ad), (bi, bd) in zip(before_r, after_r):
+        assert np.array_equal(ai, bi) and np.array_equal(ad, bd)
+    after_k = old_ex.knn_query_batch(Q, 5)
+    assert np.array_equal(before_k[0], after_k[0])
+    assert np.array_equal(before_k[1], after_k[1])
+    _assert_snapshots_equal(LIMSSnapshot.build(ix), LIMSSnapshot.load(path))
+    # and the next dirty writeback appends into the compacted file
+    se.insert(X[0] + 0.01)
+    se.refresh()
+    man_next = Manifest.load(path)
+    assert man_next.pages_file == man_c.pages_file
+    assert man_next.total_pages > man_c.total_pages
+
+
+def test_compact_through_stale_reader_is_safe(tmp_path):
+    """Regression: compact() must copy through the *latest published*
+    manifest's file size, not the calling reader's possibly older mmap
+    — a writeback since the reader's last refresh() appends extents
+    past that mmap, and a stale-sized read would silently truncate the
+    compacted file."""
+    X = gauss_mix(700, D, seed=13)
+    ix = LIMSIndex(MetricSpace(X, "l2"), n_clusters=3, m=2, n_rings=6)
+    path = str(tmp_path / "s")
+    LIMSSnapshot.build(ix).spill(path)
+    stale = PagedStore(path)            # mmap sized to generation 0
+    # a writeback this reader never refresh()ed into: dirty every
+    # cluster so new extents land beyond the stale reader's mmap
+    for c in range(ix.K):
+        ix.retrain_cluster(c)
+    ix.insert(X[0] + 0.01)
+    snap1 = LIMSSnapshot.build(ix)
+    snap1.spill(path)
+    assert Manifest.load(path).total_pages > stale.manifest.total_pages
+    man_c = stale.compact()             # must read the NEW extents fully
+    assert man_c.generation == Manifest.load(path).generation
+    _assert_snapshots_equal(snap1, LIMSSnapshot.load(path))
+
+
+def test_repeated_compaction_converges(tmp_path):
+    """compact() after compact() is stable: no garbage → same size."""
+    X = gauss_mix(600, D, seed=2)
+    ix = LIMSIndex(MetricSpace(X, "l2"), n_clusters=3, m=2, n_rings=6)
+    path = str(tmp_path / "s")
+    LIMSSnapshot.build(ix).spill(path)
+    store = PagedStore(path)
+    m1 = store.compact()
+    size1 = store.nbytes_file()
+    m2 = store.compact()
+    assert m2.generation == m1.generation + 1
+    assert store.nbytes_file() == size1
+    assert m2.extents == m1.extents
+
+
+def test_compaction_releases_retired_mmaps(tmp_path):
+    """An unlinked pages file stays mapped only while a live StoreView
+    pins it; once the last view dies, the next compaction/refresh drops
+    the mmap (releasing the unlinked file's disk blocks).  Without this
+    a long-lived reader would pin every retired generation forever."""
+    X = gauss_mix(600, D, seed=8)
+    ix = LIMSIndex(MetricSpace(X, "l2"), n_clusters=3, m=2, n_rings=6)
+    path = str(tmp_path / "s")
+    snap = LIMSSnapshot.build(ix)
+    snap.spill(path)
+    store = PagedStore(path)
+    v0 = store.view()                   # pins generation 0's file
+    f0 = v0.file
+    store.compact()
+    assert f0 in store._maps            # v0 alive → old mmap retained
+    rows_pinned = v0.gather(np.arange(4))
+    assert rows_pinned.shape == (4, D)  # still readable post-unlink
+    del v0, rows_pinned
+    store.compact()                     # next adoption prunes it
+    assert f0 not in store._maps
+    assert len(store._maps) == 1        # only the current file mapped
+
+
+# ---------------------------------------------------------- async prefetch
+def test_prefetch_async_bit_identical_and_overlaps(setup):
+    """``REPRO_PREFETCH=async`` is an IO-scheduling change only: kNN
+    results stay bit-identical to the synchronous paged path, and the
+    prefetcher demonstrably overlaps rounds — the speculative fetch for
+    at least one round completes before that round's demand fetch
+    arrives (the acceptance criterion's overlap proof)."""
+    X, ix, snap, path = setup
+    sync_ex = QueryExecutor(LIMSSnapshot.load(path, store=True),
+                            prefetch="off")     # pinned past REPRO_PREFETCH
+    pre_ex = QueryExecutor(LIMSSnapshot.load(path, store=True),
+                           prefetch="async")
+    assert sync_ex.prefetcher is None
+    pf = pre_ex.prefetcher
+    assert pf is not None
+    # de-flake the overlap assertion: on a starved runner the daemon
+    # worker might not get scheduled between submit and the next
+    # round's demand, so let each demand wait for its pending ticket —
+    # production keeps the racy best-effort behavior, this pins that
+    # the machinery (submit → background fetch → demand hit) works
+    orig_note = pf.note_demand
+
+    def patient_note(pages, ticket=None):
+        if ticket is not None:
+            assert ticket.wait(timeout=60)
+        orig_note(pages, ticket)
+
+    pf.note_demand = patient_note
+    # querying AT pivot rows collapses the seed radii to the guard band:
+    # round-0 masks are tiny and each doubling adds slots (and pages)
+    # incrementally — the regime prefetch exists for.  (Random-query
+    # batches over a corpus this small saturate the batch-deduped page
+    # union in round 0, leaving later rounds no IO to overlap.)
+    Q = np.asarray(snap.pivots, np.float64).reshape(-1, D)[:8]
+    ids_a, ds_a = sync_ex.knn_query_batch(Q, 8)
+    ids_b, ds_b = pre_ex.knn_query_batch(Q, 8)
+    assert np.array_equal(ids_a, ids_b) and np.array_equal(ds_a, ds_b)
+    assert pre_ex.last_knn["rounds"] >= 2       # tiny seed → multi-round
+    pf.drain()          # settle in-flight tickets before reading stats
+    stats = pf.snapshot()
+    assert stats["pages_submitted"] > 0
+    assert stats["pages_fetched"] == stats["pages_submitted"]
+    assert stats["overlapped_rounds"] >= 1
+    assert 0.0 <= stats["hit_rate"] <= 1.0
+    # range results are single-round (nothing to prefetch) but must be
+    # unaffected by the prefetcher's presence
+    rs = _radii(X, Q)
+    a = sync_ex.range_query_batch(Q, rs)
+    b = pre_ex.range_query_batch(Q, rs)
+    for (ai, ad), (bi, bd) in zip(a, b):
+        assert np.array_equal(ai, bi) and np.array_equal(ad, bd)
+
+
+def test_prefetch_engine_wiring(tmp_path):
+    """ServingEngine(prefetch="async") threads the mode through refresh
+    generations; results stay exact."""
+    X = gauss_mix(900, D, seed=17)
+    ix = LIMSIndex(MetricSpace(X, "l2"), n_clusters=4, m=3, n_rings=8)
+    se = ServingEngine(ix, refresh_every=0, storage="paged",
+                       storage_path=str(tmp_path / "s"), prefetch="async")
+    assert se.executor.prefetcher is not None
+    Q = _queries(X, 4, seed=3)
+    ids, ds = se.knn_query_batch(Q, 5)
+    for b, q in enumerate(Q):
+        h_ids, h_ds, _ = ix.knn_query(q, 5)
+        np.testing.assert_allclose(np.sort(ds[b]), np.sort(h_ds), atol=0)
+    se.refresh()
+    assert se.executor.prefetcher is not None   # survives the swap
+
+
+# ----------------------------------------------------------------- real IO
+def test_drop_os_cache_best_effort(setup):
+    """``--real-io`` support: dropping the OS page cache is advisory and
+    must never change results (it only makes the next cold read honest)."""
+    X, ix, snap, path = setup
+    ex = QueryExecutor(LIMSSnapshot.load(path, store=True))
+    Q = _queries(X, 4, seed=41)
+    rs = _radii(X, Q)
+    a = ex.range_query_batch(Q, rs)
+    supported = ex.snap.store.drop_os_cache()
+    assert supported == hasattr(os, "posix_fadvise")
+    ex.snap.store.cache.clear()
+    b = ex.range_query_batch(Q, rs)
+    for (ai, ad), (bi, bd) in zip(a, b):
+        assert np.array_equal(ai, bi) and np.array_equal(ad, bd)
