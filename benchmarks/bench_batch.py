@@ -22,7 +22,14 @@ in-process, print one JSON record).  Results land in
 ``BENCH_serving.json``: q/s, the paper's pages/candidates per query,
 kNN rounds + host syncs per batch (the plan/execute acceptance
 metrics), and — for the ``paged-prefetch`` config — the async
-prefetcher's overlap stats.
+prefetcher's overlap stats.  Each config also records: the frozen PR-4
+golden drivers' q/s on the same workload (asserted: no config regresses
+below them — the bar the interpret-mode rounds driver restores), the
+``ServingFrontend`` metrics under concurrent single-query submitters
+(achieved batch sizes, queue wait p50/p99, per-replica load, shed rate
+from a deliberate overload burst), and — paged configs — the cache hit
+rate of schedule-pinned eviction vs blind LRU under a squeezed
+capacity (asserted: pinning wins).
 
 ``--real-io`` drops the OS page cache (``posix_fadvise(DONTNEED)`` on
 the pages files) before each cold store pass, so the cold numbers
@@ -71,6 +78,26 @@ def _bench_once(fn) -> float:
     t0 = time.perf_counter()
     fn()
     return time.perf_counter() - t0
+
+
+def _bench_paired(fn_a, fn_b, reps: int) -> tuple:
+    """Best-of-``reps`` for two alternatives, interleaved a,b,a,b…
+
+    Shared-CPU containers drift by tens of percent across seconds; a
+    sequential mean charges that drift to whichever path ran in the slow
+    window.  Interleaving exposes both paths to the same drift and
+    best-of discards it — the standard timeit discipline — which is what
+    the golden no-regression assertion needs to not be a coin flip."""
+    fn_a(), fn_b()                          # warm-up (jit compile/trace)
+    best_a = best_b = float("inf")
+    for _ in range(max(reps, 3)):
+        t0 = time.perf_counter()
+        fn_a()
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_b()
+        best_b = min(best_b, time.perf_counter() - t0)
+    return best_a, best_b
 
 
 def main() -> None:
@@ -137,6 +164,68 @@ def main() -> None:
          f"qps={BATCH / t_scan:.0f}")
 
 
+# --------------------------------------------------------- frontend metrics
+def _bench_frontend(se, Q, k: int = 10, n_threads: int = 8) -> dict:
+    """Drive the ServingFrontend with concurrent single-query submitter
+    threads (the workload it exists for) and return its metrics record:
+    achieved batch sizes, queue wait p50/p99, frontend q/s, per-replica
+    load — plus the shed rate from a paused-queue overload burst."""
+    import threading
+
+    fe = se.frontend(max_batch=16, slo_ms=5.0, max_queue=256)
+    try:
+        per = max(len(Q) // n_threads, 1)
+
+        def submitter(i: int) -> None:
+            for q in Q[i * per:(i + 1) * per]:
+                fe.knn_query(q, k)
+
+        fe.knn_query(Q[0], k)           # warm the replica set / kernels
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=submitter, args=(i,))
+                   for i in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        elapsed = time.perf_counter() - t0
+        out = fe.metrics()
+        out["frontend_qps"] = round(n_threads * per / elapsed, 1)
+
+        # overload burst: hold the batcher, fill the bounded queue, and
+        # count how many extra submits admission control sheds
+        from repro.serving import FrontendOverload
+        ov = se.frontend(max_batch=8, slo_ms=5.0, max_queue=8)
+        try:
+            ov.pause()
+            burst, outcome = 16, {"admitted": 0, "shed": 0}
+            holders = []
+
+            def hold(q) -> None:
+                try:
+                    ov.knn_query(q, k)
+                    outcome["admitted"] += 1
+                except FrontendOverload:
+                    outcome["shed"] += 1
+
+            for j in range(burst):
+                th = threading.Thread(target=hold, args=(Q[j % len(Q)],))
+                th.start()
+                holders.append(th)
+                time.sleep(0.002)       # let the queue actually fill
+            ov.resume()
+            for th in holders:
+                th.join()
+            m = ov.metrics()
+            out["overload"] = {"burst": burst, **outcome,
+                               "shed_rate": m["shed_rate"]}
+        finally:
+            ov.close()
+    finally:
+        fe.close()
+    return out
+
+
 # ---------------------------------------------------------- serving scaling
 def serving_worker() -> dict:
     """Measure ServingEngine throughput with this process's device count
@@ -156,9 +245,24 @@ def serving_worker() -> dict:
     rs = np.array([float(np.quantile(dist_one_to_many(q, X, "l2"), 1e-3))
                    for q in Q])
     reps = 1 if QUICK else 3
-    t_range = _bench(lambda: se.range_query_batch(Q, rs), reps)
-    t_knn = _bench(lambda: se.knn_query_batch(Q, 10), reps)
     ex = se.executor
+
+    # paired best-of timing against the frozen PR-4 drivers
+    # (tests/_golden_drivers) — the no-regression bar every config must
+    # clear (the PR-5 interpret-mode loop fell below it; the
+    # vectorized-round driver is the fix)
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), "tests"))
+    import _golden_drivers as golden
+    g_range, g_knn = ((golden.range_store, golden.knn_store)
+                      if se.store is not None
+                      else (golden.range_resident, golden.knn_resident))
+    t_range, t_g_range = _bench_paired(
+        lambda: se.range_query_batch(Q, rs),
+        lambda: g_range(ex, Q, rs), reps)
+    t_knn, t_g_knn = _bench_paired(
+        lambda: se.knn_query_batch(Q, 10),
+        lambda: g_knn(ex, Q, 10), reps)
     rec = {
         "devices": jax.device_count(),
         "n_shards": getattr(ex, "n_shards", 1),
@@ -168,9 +272,19 @@ def serving_worker() -> dict:
         "knn_qps": round(BATCH / t_knn, 1),
         # the plan/execute acceptance metrics: growing-radius rounds per
         # batch and device→host syncs per batch (O(1) in the compiled
-        # resident loop; per-round in the host-driven paged backend)
+        # resident loop; per-round in the host-driven paged backend),
+        # plus which kNN driver answered (loop / rounds / paged)
         "knn": dict(ex.last_knn),
     }
+
+    rec["golden"] = {"range_qps": round(BATCH / t_g_range, 1),
+                     "knn_qps": round(BATCH / t_g_knn, 1)}
+
+    # frontend phase: concurrent single-query submitters through the
+    # dynamic batcher → router → replica set (one replica per device);
+    # records achieved batch sizes, queue waits, per-replica balance,
+    # and a deliberate overload burst for the shed rate
+    rec["frontend"] = _bench_frontend(se, Q)
     if se.store is not None:
         # the paper's IO metric: page accesses (and candidates) per
         # query, from the store's cache stats over one clean batch each.
@@ -250,6 +364,32 @@ def serving_worker() -> dict:
             pf["workload"] = "pivot-drilldown-16q-k200"
             pf["knn_rounds"] = ex.last_knn["rounds"]
             rec["storage"]["prefetch"] = pf
+
+        # schedule pinning vs blind LRU: the same cold kNN batch through
+        # a capacity-squeezed cache with plan pinning on vs off.  The
+        # squeeze (a quarter of the batch's unique pages) forces
+        # evictions mid-batch; blind LRU then drops pages the plan's
+        # later rounds are guaranteed to re-demand, pinning holds them —
+        # the acceptance signal is a strictly higher hit rate pinned.
+        squeeze = max(4, io_knn["misses"] // 4)
+
+        def _hit_rate(pin: bool) -> float:
+            os.environ["REPRO_CACHE_PIN"] = "on" if pin else "off"
+            cap0 = st.cache.capacity_pages
+            st.cache.capacity_pages = squeeze
+            try:
+                _cold()
+                se.knn_query_batch(Q, 10)
+                return st.stats.snapshot()["hit_rate"]
+            finally:
+                st.cache.capacity_pages = cap0
+                os.environ.pop("REPRO_CACHE_PIN", None)
+
+        rec["storage"]["cache_pinning"] = {
+            "squeezed_capacity_pages": int(squeeze),
+            "hit_rate_pinned": _hit_rate(True),
+            "hit_rate_blind_lru": _hit_rate(False),
+        }
     return rec
 
 
@@ -281,6 +421,29 @@ def bench_serving_scaling(configs=SERVING_CONFIGS,
             cwd=root, env=env, capture_output=True, text=True, check=True)
         rec = json.loads(out.stdout.strip().splitlines()[-1])
         results[label] = rec
+        # no-regression bar (satellite of the rounds-driver fix): every
+        # config must keep up with the PR-4 golden drivers it replaced
+        # (10% measurement slack; the regression this guards against was
+        # a 2.4x q/s drop).  Async-prefetch configs get a wider band:
+        # speculation eagerly evaluates the next round's mask on the
+        # foreground thread, a real per-round kernel cost the
+        # never-prefetching golden doesn't pay — on interpret-CPU fake
+        # IO that overhead buys nothing back (the overlap it exists for
+        # is measured on the drilldown workload below), so the bar here
+        # only guards against driver regressions, not the documented
+        # speculation cost.
+        slack = 0.75 if extra_env.get("REPRO_PREFETCH") == "async" else 0.9
+        for kind in ("range", "knn"):
+            new, old = rec[f"{kind}_qps"], rec["golden"][f"{kind}_qps"]
+            assert new >= slack * old, (
+                f"serving config '{label}': {kind} at {new} q/s is "
+                f"slower than the PR-4 golden driver ({old} q/s)")
+        cp = (rec.get("storage") or {}).get("cache_pinning")
+        if cp:
+            assert cp["hit_rate_pinned"] > cp["hit_rate_blind_lru"], (
+                f"serving config '{label}': schedule pinning "
+                f"({cp['hit_rate_pinned']}) did not beat blind LRU "
+                f"({cp['hit_rate_blind_lru']}) under a squeezed cache")
         io = rec.get("storage")
         extra = (f" pages/q={io['range_pages_per_query']:.0f}r"
                  f"/{io['knn_pages_per_query']:.0f}k"
@@ -293,13 +456,25 @@ def bench_serving_scaling(configs=SERVING_CONFIGS,
              f"({rec['executor']}){extra}")
         emit(f"serving/knn_{label}", 1e6 / rec["knn_qps"],
              f"qps={rec['knn_qps']:.0f} rounds={rec['knn']['rounds']} "
-             f"syncs={rec['knn']['host_syncs']}")
+             f"syncs={rec['knn']['host_syncs']} "
+             f"driver={rec['knn'].get('driver')} "
+             f"golden_qps={rec['golden']['knn_qps']:.0f}")
+        fr = rec.get("frontend")
+        if fr:
+            emit(f"serving/frontend_{label}", 1e6 / fr["frontend_qps"],
+                 f"qps={fr['frontend_qps']:.0f} "
+                 f"batch_mean={fr['batch_size_mean']} "
+                 f"wait_p99_ms={fr['queue_wait_ms_p99']} "
+                 f"overload_shed_rate={fr['overload']['shed_rate']}")
     write_json(os.path.join(root, "BENCH_serving.json"),
                {"bench": "ServingEngine queries/sec, 1 vs N simulated "
                          "host devices (CPU-interpret kernels) + the "
                          "paged storage tier (page accesses per query, "
                          "kNN rounds / host syncs per batch, async "
-                         "prefetch overlap)",
+                         "prefetch overlap) + the serving frontend "
+                         "(dynamic batching, queue waits, shed rate, "
+                         "per-replica load) with PR-4 golden-driver "
+                         "baselines and pinned-vs-LRU cache hit rates",
                 "batch": BATCH, "devices": results})
 
 

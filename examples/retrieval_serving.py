@@ -5,11 +5,14 @@ over a corpus of embeddings. Serving runs through the layered stack
 (DESIGN.md §1): a ``BatchedLIMS`` snapshot executor first (the whole
 query batch through the Pallas kernels `pdist` → `rankeval` →
 `range_filter` in one launch sequence — compiled on TPU/GPU, interpreted
-on CPU), then the full ``ServingEngine`` frontend: online inserts with
+on CPU), then the full ``ServingEngine`` lifecycle: online inserts with
 double-buffered snapshot refresh, auto-sharding across every visible
-device. The host index answers the same queries as a cross-check; both
-are exact. This is the deployment story in DESIGN.md §2: the index
-serves the models the framework trains.
+device — and finally the ``ServingFrontend`` (DESIGN.md §9), which
+coalesces concurrent single-query submitters into kernel batches and
+routes them across a replica set, bit-identically. The host index
+answers the same queries as a cross-check; both are exact. This is the
+deployment story in DESIGN.md §2: the index serves the models the
+framework trains.
 
     PYTHONPATH=src python examples/retrieval_serving.py
     # exercise the cluster-sharded executor on fake host devices:
@@ -196,6 +199,34 @@ def main() -> None:
           f"{io['pages']} pages ({st['pages_per_query']:.1f}/query, "
           f"{st['candidates_per_query']:.0f} candidates/query, cache hit "
           f"rate {st['hit_rate']:.0%}); results match the warm engine. OK")
+
+    # 8) the serving frontend (DESIGN.md §9): real traffic is single
+    # queries from many clients, not pre-assembled batches.  The
+    # frontend coalesces concurrent submitters into kernel-shaped
+    # batches under a latency SLO and routes each batch's sub-batches
+    # across a replica set (one replica per device) by the batch's own
+    # CandidatePlan — per-query results stay bit-identical to a direct
+    # executor call, so batching and routing are pure performance.
+    import threading
+    with cold.frontend(max_batch=16, slo_ms=10.0, max_queue=64) as fe:
+        got = [None] * len(fresh)
+        threads = [threading.Thread(
+            target=lambda j=j: got.__setitem__(j, fe.knn_query(fresh[j], 1)))
+            for j in range(len(fresh))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert [int(ids[0]) for ids, _ in got] == gids, \
+            "frontend results must equal the direct executor's"
+        m = fe.metrics()
+    repl = m["routing"]["replicas"]
+    print(f"frontend: {m['submitted']} concurrent submitters → "
+          f"{m['batches']} kernel batch(es) "
+          f"(mean size {m['batch_size_mean']}, queue wait "
+          f"p99 {m['queue_wait_ms_p99']:.1f} ms, shed rate "
+          f"{m['shed_rate']:.0%}) over {len(repl)} replica(s); "
+          f"all results exact. OK")
 
 
 if __name__ == "__main__":

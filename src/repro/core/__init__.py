@@ -17,8 +17,17 @@ from .paging import PageStore
 from .pivots import fft_pivots
 from .rankmodel import (PolyRankModel, SearchStats, binary_search,
                         exponential_search)
-from .serving import ServingEngine
 from .snapshot import LIMSSnapshot, maybe_paged
+
+
+def __getattr__(name: str):
+    # lazy: ServingEngine moved to repro.serving (repro.core.serving is
+    # a shim); importing it eagerly here would cycle through the serving
+    # package while this module is still initializing
+    if name == "ServingEngine":
+        from ..serving.engine import ServingEngine
+        return ServingEngine
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "BatchedLIMS", "Clustering", "kcenter", "kmeans", "LIMSIndex",

@@ -45,6 +45,7 @@ f64 distances on the host (DESIGN.md §3, §8).
 from __future__ import annotations
 
 import functools
+import os
 import threading
 from types import SimpleNamespace
 
@@ -56,8 +57,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from ..kernels import ops
+from ..kernels.dispatch import default_interpret
 from ..sharding.logical import default_rules, serving_mesh, spec_for
-from ..storage import PagePrefetcher, plan_batch, prefetch_mode
+from ..storage import (PagePrefetcher, cache_pin_mode, plan_batch,
+                       prefetch_mode)
 from .metrics import dist_one_to_many
 from .planner import (_BALL_ABS, _R_REL, _SEED_REL, CandidatePlan, Planner,
                       plan_arrays)
@@ -190,6 +193,25 @@ def _knn_loop_single(qf, d2, kth0, r0, *arrays, n_rings, k_eff,
 # ---------------------------------------------------------------------------
 # execution backends (both consume the same CandidatePlan)
 # ---------------------------------------------------------------------------
+def _knn_driver(ex) -> str:
+    """Which resident kNN driver executes the schedule, resolved per
+    call so ``REPRO_KNN_DRIVER`` monkeypatching works on long-lived
+    executors.  ``loop`` is the compiled ``lax.while_loop``; ``rounds``
+    is the host-driven vectorized-round driver.  ``auto`` (default)
+    picks ``rounds`` on single-device XLA-CPU interpret — there the
+    jitted loop's slow lowerings (notably ``top_k``, ~40× its eager
+    dispatch) cost more than per-round host syncs ever did (the PR-5
+    ~433 → ~181 q/s regression) — and ``loop`` everywhere else: real
+    accelerators keep O(1) host syncs, and the sharded loop's per-round
+    collectives have no eager equivalent."""
+    mode = os.environ.get("REPRO_KNN_DRIVER", "auto").strip().lower()
+    if mode in ("loop", "rounds"):
+        return mode
+    if default_interpret() and getattr(ex, "n_shards", 1) <= 1:
+        return "rounds"
+    return "loop"
+
+
 class _ResidentBackend:
     """In-memory execution: kernels over the snapshot's device rows."""
 
@@ -198,6 +220,9 @@ class _ResidentBackend:
     def __init__(self, ex: "QueryExecutor"):
         self.ex = ex
         self.prefetcher = None          # nothing to prefetch in memory
+
+    def release(self, plan: CandidatePlan) -> None:
+        """No storage, nothing pinned."""
 
     def range_hits(self, plan: CandidatePlan) -> np.ndarray:
         ex = self.ex
@@ -208,12 +233,65 @@ class _ResidentBackend:
 
     def knn_candidates(self, plan: CandidatePlan):
         ex = self.ex
+        if _knn_driver(ex) == "rounds":
+            return self._knn_host_rounds(plan)
+        ex.last_driver = "loop"
         r0 = jnp.asarray(plan.radii, jnp.float32)
         final, rounds = ex._knn_device_loop(
             plan.qf, r0, plan.k, plan.max_rounds)
         final, rounds = jax.device_get((final, rounds))
         ex._count_sync()
         return np.asarray(final, bool), int(rounds)
+
+    def _knn_host_rounds(self, plan: CandidatePlan):
+        """The same certified schedule as ``_knn_rounds``, driven from
+        the host with eager per-round kernel dispatches: identical seed
+        skip-ahead, identical guard-band certification, identical exact
+        fallback — only the loop control moves to Python, trading O(1)
+        host syncs for XLA-CPU's fast eager lowerings.  The certified
+        set is a superset of the closed k-th ball at whatever schedule
+        radius certifies, so refinement returns bit-identical results
+        whichever driver ran (pinned by tests)."""
+        ex = self.ex
+        s = ex.snap
+        qf = plan.qf
+        k_eff = plan.k
+        d2 = ex._sq_dists(qf)
+        kth0 = jnp.sqrt(jnp.maximum(
+            -jax.lax.top_k(-d2, k_eff)[0][:, -1], 0.0))
+        r0 = jnp.asarray(plan.radii, jnp.float32)
+        seed = kth0 * (1.0 + _SEED_REL) + _BALL_ABS
+        t0 = jnp.ceil(jnp.log2(jnp.maximum(seed, 1e-30) / r0))
+        r = np.asarray(r0 * jnp.exp2(jnp.maximum(t0, 0.0)))
+        ex._count_sync()
+        B = plan.B
+        done = np.zeros(B, bool)
+        final = np.zeros((B, s.n_slots), bool)
+        rounds = 0
+        for t in range(plan.max_rounds):
+            rounds = t + 1
+            rf = jnp.asarray(r, jnp.float32)
+            cand = ex._candidate_mask(qf, rf)
+            ball = d2 <= ((rf * (1.0 + _R_REL) + _BALL_ABS) ** 2)[:, None]
+            candb = cand & ball
+            cnt = jnp.sum(candb, axis=1)
+            dm = jnp.where(candb, d2, jnp.inf)
+            kth = jnp.sqrt(jnp.maximum(
+                -jax.lax.top_k(-dm, k_eff)[0][:, -1], 0.0))
+            ok = np.asarray((cnt >= k_eff) &
+                            (kth <= rf * (1.0 - _R_REL) - _BALL_ABS))
+            ex._count_sync()
+            newly = ok & ~done
+            if newly.any():
+                final[newly] = np.asarray(candb)[newly]
+                done |= newly
+            if done.all():
+                break
+            r = np.where(done, r, r * 2.0)
+        else:
+            final[~done] = s.valid_np[None]
+        ex.last_driver = "rounds"
+        return final, rounds
 
 
 class _PagedBackend:
@@ -237,6 +315,24 @@ class _PagedBackend:
         self.prefetcher = PagePrefetcher(ex.snap.store) \
             if mode == "async" else None
 
+    # ----------------------------------------------------- schedule pins
+    def _pin(self, plan: CandidatePlan, pages: np.ndarray) -> None:
+        """Pin one round's planned pages for the plan's lifetime
+        (``REPRO_CACHE_PIN=off`` reverts to blind LRU).  The ledger
+        lives on the plan so ``release`` can drain it even when the
+        executor errors mid-batch."""
+        if len(pages) and cache_pin_mode():
+            self.ex.snap.store.pin_pages(pages)
+            plan._pins.append(pages)
+
+    def release(self, plan: CandidatePlan) -> None:
+        """Drop every page hold this plan's execution took (idempotent:
+        the ledger drains)."""
+        store = self.ex.snap.store
+        pins, plan._pins = plan._pins, []
+        for pages in pins:
+            store.unpin_pages(pages)
+
     # ------------------------------------------------------------- range
     def range_hits(self, plan: CandidatePlan) -> np.ndarray:
         """Same candidate mask as the resident path, ball prefilter on
@@ -248,6 +344,10 @@ class _PagedBackend:
         store = ex.snap.store
         cand = plan.mask
         io = plan_batch(cand, store.layout)
+        # schedule-aware eviction: the batch's planned pages stay pinned
+        # until execute_*'s finally releases the plan — a squeezed cache
+        # can't evict them between fetch, gather and exact refinement
+        self._pin(plan, io.pages)
         store.fetch(io)
         rf = jnp.asarray(plan.radii, jnp.float32)
         hits = np.zeros_like(cand)
@@ -261,6 +361,7 @@ class _PagedBackend:
             hits[:, io.slots] = cand[:, io.slots] & ball
         store.record_queries(io.pages_per_query, io.cand_per_query)
         ex.last_io = io.summary()
+        ex.last_io["pinned_pages"] = sum(len(p) for p in plan._pins)
         return hits
 
     # --------------------------------------------------------------- kNN
@@ -277,6 +378,7 @@ class _PagedBackend:
         — ``_refine_topk`` therefore returns results bit-identical to
         the in-memory executor (DESIGN.md §7)."""
         ex = self.ex
+        ex.last_driver = "paged"
         s = ex.snap
         store = s.store
         pf = self.prefetcher
@@ -303,6 +405,10 @@ class _PagedBackend:
             if pf is not None:
                 pf.note_demand(io.pages, ticket)
                 ticket = None
+            # pin before the fetch: earlier rounds' pages a later round
+            # re-demands (growing radii are supersets) stay resident
+            # until execute_knn's finally releases the plan
+            self._pin(plan, io.pages)
             store.fetch(io)
             # pages(∪ rounds) = ∪ pages(new slots per round): only map
             # slots not already charged to the query
@@ -327,6 +433,7 @@ class _PagedBackend:
                 spec[done] = False
                 pio = plan_batch(spec, store.layout, per_query=False,
                                  exclude=pos >= 0)
+                self._pin(plan, pio.pages)   # speculative pages too
                 ticket = pf.submit(pio.pages)
             if len(new):
                 d2_new = np.asarray(ops.pdist(
@@ -370,7 +477,8 @@ class _PagedBackend:
         store.record_queries(ppq, cpq)
         ex.last_io = {"pages": len(set().union(*pages_seen)),
                       "pages_per_query": ppq,
-                      "candidates_per_query": [int(c) for c in cpq]}
+                      "candidates_per_query": [int(c) for c in cpq],
+                      "pinned_pages": sum(len(p) for p in plan._pins)}
         if pf is not None:
             ex.last_io["prefetch"] = pf.snapshot()
         return final, rounds
@@ -395,9 +503,10 @@ class QueryExecutor:
             if snapshot.store is not None else _ResidentBackend(self)
         # IO summary of the most recent store-mode batch (None otherwise)
         self.last_io: dict | None = None
-        # {backend, rounds, host_syncs} of the most recent kNN batch
-        # (last-writer-wins under concurrent batches, like last_io)
+        # {backend, rounds, host_syncs, driver} of the most recent kNN
+        # batch (last-writer-wins under concurrent batches, like last_io)
         self.last_knn: dict | None = None
+        self.last_driver: str | None = None
         # per-thread sync counter: executors serve lock-free concurrent
         # query threads, and one batch's count must not absorb another's
         self._tls = threading.local()
@@ -476,19 +585,32 @@ class QueryExecutor:
         Returns a list of B ``(ids, dists)`` pairs (int64 / float64), the
         same results as ``LIMSIndex.range_query`` per query.
         """
-        s = self.snap
         Q = np.atleast_2d(np.asarray(Q, np.float64))
         B = Q.shape[0]
         r_arr = np.broadcast_to(np.asarray(r, np.float64), (B,))
         plan = self.planner.plan_range(Q, r_arr)
-        hit = self.backend.range_hits(plan)
-        out = []
-        for b in range(B):
-            idx = np.nonzero(hit[b])[0]
-            ids = s.gids_np[idx]
-            d_true = dist_one_to_many(Q[b], self._refine_rows(idx), "l2")
-            keep = d_true <= r_arr[b]
-            out.append((ids[keep], d_true[keep]))
+        return self.execute_range(Q, plan)
+
+    def execute_range(self, Q, plan: CandidatePlan):
+        """Execute a prebuilt range plan — the router's entry point: a
+        replica runs a ``plan.subset`` built by another executor's
+        planner without constructing a second plan.  ``Q`` must be the
+        (B, d) f64 queries the plan was built for (the plan carries only
+        their f32 device copy; exact refinement needs f64)."""
+        s = self.snap
+        Q = np.atleast_2d(np.asarray(Q, np.float64))
+        try:
+            hit = self.backend.range_hits(plan)
+            out = []
+            for b in range(Q.shape[0]):
+                idx = np.nonzero(hit[b])[0]
+                ids = s.gids_np[idx]
+                d_true = dist_one_to_many(Q[b], self._refine_rows(idx),
+                                          "l2")
+                keep = d_true <= plan.radii[b]
+                out.append((ids[keep], d_true[keep]))
+        finally:
+            self.backend.release(plan)
         return out
 
     def range_query(self, q, r: float):
@@ -510,10 +632,25 @@ class QueryExecutor:
             return (np.empty((B, 0), np.int64), np.empty((B, 0)))
         self._tls.syncs = 0
         plan = self.planner.plan_knn(Q, k_eff, max_rounds)
-        final, rounds = self.backend.knn_candidates(plan)
-        self.last_knn = {"backend": self.backend.name, "k": k_eff,
-                         "rounds": rounds, "host_syncs": self._tls.syncs}
-        return self._refine_topk(Q, final, k_eff)
+        return self.execute_knn(Q, plan)
+
+    def execute_knn(self, Q, plan: CandidatePlan):
+        """Execute a prebuilt kNN plan (see :meth:`execute_range`).
+        A plan built by a *different* executor's planner starts a fresh
+        sync count here — the builder's syncs were charged to its own
+        thread-local counter when the plan was constructed."""
+        Q = np.atleast_2d(np.asarray(Q, np.float64))
+        if plan._planner is not self.planner:
+            self._tls.syncs = 0
+        try:
+            final, rounds = self.backend.knn_candidates(plan)
+            self.last_knn = {"backend": self.backend.name, "k": plan.k,
+                             "rounds": rounds,
+                             "host_syncs": self._tls.syncs,
+                             "driver": self.last_driver}
+            return self._refine_topk(Q, final, plan.k)
+        finally:
+            self.backend.release(plan)
 
     def _refine_topk(self, Q, final: np.ndarray, k_eff: int):
         """Exact f64 refinement of the certified candidate sets: the

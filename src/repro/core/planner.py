@@ -133,6 +133,10 @@ class CandidatePlan:
     _dev: tuple | None = field(repr=False, default=None)
     _mask_np: np.ndarray | None = field(repr=False, default=None)
     _routing_np: np.ndarray | None = field(repr=False, default=None)
+    # page arrays the paged backend pinned for this plan's execution;
+    # drained by the executor's release (finally) — never shared across
+    # plans, so a router subset starts with its own empty ledger
+    _pins: list = field(repr=False, default_factory=list)
 
     @property
     def qf(self) -> jax.Array:
@@ -175,6 +179,36 @@ class CandidatePlan:
             self._routing_np = np.asarray(self.routing_dev)
             self._planner.ex._count_sync()
         return self._routing_np
+
+    def subset(self, idx: np.ndarray, planner: "Planner | None" = None,
+               device=None) -> "CandidatePlan":
+        """The plan restricted to queries ``idx`` — what the router
+        dispatches to a replica (one plan construction per batch still
+        holds: a subset is a view, not a rebuild, and does not bump the
+        planner's ``built`` counter).
+
+        Per-query plan rows are independent of batchmates (every mask /
+        routing / schedule row is a function of that query alone), so
+        slicing the batch axis preserves certification exactly.  Host
+        copies already materialized slice for free; device arrays are
+        NOT carried over — the receiving executor re-evaluates them
+        through its own pipeline (same math, its own device), with
+        ``device`` placing the sliced queries there first.  ``planner``
+        rebinds the subset to the replica executor that will run it.
+        """
+        idx = np.asarray(idx, np.int64)
+        qf = self._qf[jnp.asarray(idx)]
+        if device is not None:
+            qf = jax.device_put(qf, device)
+        return CandidatePlan(
+            kind=self.kind, B=len(idx), k=self.k,
+            max_rounds=self.max_rounds, growth=self.growth,
+            radii=self.radii[idx],
+            _planner=planner if planner is not None else self._planner,
+            _qf=qf,
+            _mask_np=None if self._mask_np is None else self._mask_np[idx],
+            _routing_np=None if self._routing_np is None
+            else self._routing_np[idx])
 
 
 class Planner:

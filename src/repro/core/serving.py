@@ -1,306 +1,12 @@
-"""Layer 3 of the serving stack: the mutable frontend.
+"""Compatibility shim: ``ServingEngine`` lives in ``repro.serving``.
 
-``ServingEngine`` is what a deployment talks to.  It owns
-
-  * the host ``LIMSIndex`` (source of truth for §5.3 updates),
-  * a double-buffered pair of snapshot executors: the *active* executor
-    serves queries; ``refresh()`` builds a fresh ``LIMSSnapshot`` into the
-    standby slot **off the hot path** and then swaps the two with a single
-    attribute assignment — atomic under the GIL, so an in-flight batch
-    that already grabbed the active executor keeps its consistent
-    snapshot while new batches see the new one.  No query ever blocks on
-    a rebuild and no query ever observes a half-built snapshot.
-
-Updates (``insert`` / ``delete`` / ``retrain_cluster``) go straight to
-the host index and bump a mutation counter; once the counter reaches
-``refresh_every`` the engine triggers a rebuild — synchronously by
-default (deterministic for tests), or on a background thread with
-``async_refresh=True`` (updates serialize with the rebuild via a lock;
-queries never take it).  Between refreshes queries serve the last
-snapshot — stale but *consistent and exact with respect to that
-snapshot*, the usual contract of a serving index (DESIGN.md §5).
+The serving stack grew past one module — frontend (dynamic batching +
+admission control), router (plan-driven replica dispatch), replicas
+(snapshot placement + load stats) and the lifecycle engine are the
+layered ``repro.serving`` package now (DESIGN.md §9).  This module keeps
+the historical import path ``repro.core.serving.ServingEngine``
+bit-identical: same class object, no behavior shims.
 """
-from __future__ import annotations
-
-import shutil
-import tempfile
-import threading
-import weakref
-
-from jax.sharding import Mesh
-
-from ..storage import (DEFAULT_CACHE_PAGES, DEFAULT_PAGE_BYTES, PagedStore,
-                       storage_mode)
-from .executor import QueryExecutor, make_executor
-from .index import LIMSIndex
-from .snapshot import LIMSSnapshot
-
-
-class ServingEngine:
-    """Double-buffered snapshot serving over a mutable ``LIMSIndex``.
-
-    Storage (DESIGN.md §7): with ``storage="paged"`` (or the process-wide
-    ``REPRO_STORAGE=paged`` default) every snapshot generation spills to
-    ``storage_path`` and serves store-backed — row payloads on disk
-    behind an LRU page cache, query IO planned page-wise.  A refresh
-    writes only the clusters whose rows changed as *new* page extents
-    (a retrain's partial reconstruction touches one extent, not the
-    corpus) and publishes with one atomic manifest swap; the long-lived
-    ``PagedStore`` keeps its warm cache across generations because page
-    ids are append-only.  :meth:`from_spill` is the cold-start path — a
-    replica begins serving from a spilled directory without rebuilding
-    anything.
-    """
-
-    def __init__(self, index: LIMSIndex | None, *, refresh_every: int = 64,
-                 sharded: bool | None = None, mesh: Mesh | None = None,
-                 async_refresh: bool = False,
-                 build_backend: str | None = None,
-                 storage: str | None = None,
-                 storage_path: str | None = None,
-                 page_bytes: int = DEFAULT_PAGE_BYTES,
-                 cache_pages: int | None = DEFAULT_CACHE_PAGES,
-                 prefetch: str | None = None,
-                 _initial: QueryExecutor | None = None):
-        self._index = index
-        # paged executors overlap kNN rounds' page IO with refinement
-        # when "async" (None defers to REPRO_PREFETCH; DESIGN.md §8)
-        self._prefetch = prefetch
-        self._refresh_every = int(refresh_every)
-        # online retrains route through the device builder (repro.build;
-        # DESIGN.md §6) whenever the kernels compile — on real
-        # accelerators partial reconstruction stops being the refresh
-        # bottleneck.  CPU runs interpret-mode kernels, where the device
-        # path only costs (retrains hold the update lock), so the
-        # default resolves by dispatch policy; pass "device"/"host" to
-        # pin it.
-        if build_backend is None:
-            from ..kernels.dispatch import default_interpret
-            build_backend = "host" if default_interpret() else "device"
-        self._build_backend = build_backend
-        self._sharded = sharded
-        self._mesh = mesh
-        self._async = bool(async_refresh)
-        if storage is None:
-            storage = storage_mode() or None
-        if storage not in (None, "paged"):
-            raise ValueError(f"unknown storage mode {storage!r}")
-        self._storage = storage
-        self._page_bytes = int(page_bytes)
-        self._cache_pages = cache_pages
-        self._store: PagedStore | None = None
-        self._storage_path = storage_path
-        if storage == "paged" and storage_path is None:
-            self._storage_path = tempfile.mkdtemp(prefix="lims-store-")
-            weakref.finalize(self, shutil.rmtree, self._storage_path,
-                             ignore_errors=True)
-        # guards host-index mutation + snapshot builds (never queries)
-        self._update_lock = threading.Lock()
-        # guards background-refresh thread bookkeeping
-        self._thread_lock = threading.Lock()
-        self._refresh_thread: threading.Thread | None = None
-        self._refresh_again = False
-        self.generation = 0
-        self.pending_mutations = 0
-        if _initial is not None:
-            self._active: QueryExecutor = _initial
-            view = getattr(_initial.snap, "store", None)
-            # the engine holds the shared reader; snapshots hold
-            # per-generation views of it
-            self._store = view.base if view is not None else None
-        else:
-            self._active = self._build_executor()
-        self._standby: QueryExecutor | None = None
-
-    # ----------------------------------------------------------- cold start
-    @classmethod
-    def from_spill(cls, path: str, *, index: LIMSIndex | None = None,
-                   sharded: bool | None = None, mesh: Mesh | None = None,
-                   cache_pages: int | None = DEFAULT_CACHE_PAGES,
-                   prefetch: str | None = None,
-                   **kw) -> "ServingEngine":
-        """Cold-start a serving replica from a spilled snapshot directory.
-
-        Serving begins immediately — only the manifest and metadata load
-        up front; row pages fault in on demand through the page cache
-        (replica warm-up is query-driven).  Without ``index`` the engine
-        is read-only: updates and refreshes raise until a host index is
-        supplied via :meth:`attach_index` (e.g. rebuilt in the
-        background).  With ``index``, refreshes write back to ``path``.
-        """
-        snap = LIMSSnapshot.load(path, store=True, cache_pages=cache_pages)
-        ex = make_executor(snap, sharded=sharded, mesh=mesh,
-                           prefetch=prefetch)
-        # refresh writebacks must keep the on-disk page geometry
-        kw.setdefault("page_bytes", snap.store.manifest.page_bytes)
-        return cls(index, storage="paged", storage_path=path,
-                   sharded=sharded, mesh=mesh, cache_pages=cache_pages,
-                   prefetch=prefetch, _initial=ex, **kw)
-
-    def attach_index(self, index: LIMSIndex) -> None:
-        """Give a cold-started engine its mutable host index (updates and
-        refreshes become available; the next refresh snapshots it)."""
-        with self._update_lock:
-            self._index = index
-
-    def _require_index(self) -> LIMSIndex:
-        if self._index is None:
-            raise RuntimeError(
-                "cold-started engine is read-only: no host index attached "
-                "(use attach_index() once one is built)")
-        return self._index
-
-    # ------------------------------------------------------------ plumbing
-    def _build_executor(self) -> QueryExecutor:
-        snap = LIMSSnapshot.build(self._require_index())
-        if self._storage == "paged":
-            snap.spill(self._storage_path, page_bytes=self._page_bytes)
-            if self._store is None:
-                self._store = PagedStore(self._storage_path,
-                                         cache_pages=self._cache_pages)
-            else:
-                # adopt the freshly published generation: rewritten
-                # clusters reference appended extents, cached pages of
-                # untouched clusters stay warm (append-only page ids).
-                # with_store then freezes the new layout into this
-                # snapshot's view — executors still serving the previous
-                # generation keep gathering through THEIR view, so the
-                # swap can never remap an in-flight batch's slots.
-                self._store.refresh()
-            snap = snap.with_store(self._store)
-        return make_executor(snap, sharded=self._sharded, mesh=self._mesh,
-                             prefetch=self._prefetch)
-
-    @property
-    def index(self) -> LIMSIndex | None:
-        return self._index
-
-    @property
-    def store(self) -> PagedStore | None:
-        """The paged-store reader (None when serving resident)."""
-        return self._store
-
-    @property
-    def executor(self) -> QueryExecutor:
-        """The active executor; grab it once per batch for a consistent
-        view across the whole batch."""
-        return self._active
-
-    @property
-    def snapshot(self) -> LIMSSnapshot:
-        return self._active.snap
-
-    # ------------------------------------------------------------- queries
-    # Each query method reads ``self._active`` exactly once: the batch
-    # runs against that snapshot even if a refresh swaps mid-flight.
-    def range_query_batch(self, Q, r):
-        return self._active.range_query_batch(Q, r)
-
-    def range_query(self, q, r: float):
-        return self._active.range_query(q, r)
-
-    def knn_query_batch(self, Q, k: int, **kw):
-        return self._active.knn_query_batch(Q, k, **kw)
-
-    def knn_query(self, q, k: int):
-        return self._active.knn_query(q, k)
-
-    # ------------------------------------------------------------- updates
-    # The mutation counter is only ever read or written under
-    # _update_lock (refresh() subtracts under the same lock), so
-    # concurrent updaters and a background rebuild can't lose counts.
-    # The threshold check happens after the lock is released — refresh()
-    # re-takes it — so two racing updaters can at worst both trigger a
-    # refresh, which is harmless (the second sees zero pending).
-    def insert(self, p) -> int:
-        with self._update_lock:
-            gid = self._require_index().insert(p)
-            self.pending_mutations += 1
-            pending = self.pending_mutations
-        self._maybe_refresh(pending)
-        return gid
-
-    def delete(self, q) -> int:
-        with self._update_lock:
-            removed = self._require_index().delete(q)
-            self.pending_mutations += removed
-            pending = self.pending_mutations
-        if removed:
-            self._maybe_refresh(pending)
-        return removed
-
-    def retrain_cluster(self, c: int) -> None:
-        with self._update_lock:
-            self._require_index().retrain_cluster(
-                c, backend=self._build_backend)
-            # a retrain rewrites cluster structure the snapshot mirrors;
-            # force the next refresh decision regardless of the
-            # insert/delete count
-            self.pending_mutations += self._refresh_every
-            pending = self.pending_mutations
-        self._maybe_refresh(pending)
-
-    def compact(self):
-        """Reclaim the paged store's garbage extents: rewrite live
-        extents into a fresh pages file and swap manifests atomically
-        (``PagedStore.compact``).  Serialized with updates/refreshes via
-        the update lock — queries never block, and executors serving the
-        pre-compaction generation keep their file pinned through their
-        ``StoreView``.  No-op (returns None) when serving resident."""
-        if self._store is None:
-            return None
-        with self._update_lock:
-            return self._store.compact()
-
-    def _maybe_refresh(self, pending: int) -> None:
-        if self._refresh_every and pending >= self._refresh_every:
-            if self._async:
-                self._spawn_refresh()
-            else:
-                self.refresh()
-
-    # ------------------------------------------------------------- refresh
-    def refresh(self) -> None:
-        """Rebuild the standby snapshot and swap it in atomically."""
-        with self._update_lock:
-            seen = self.pending_mutations
-            new = self._build_executor()
-            # the swap: one attribute store (GIL-atomic); the previous
-            # executor moves to standby, kept alive for in-flight batches
-            self._active, self._standby = new, self._active
-            self.pending_mutations -= seen
-            self.generation += 1
-
-    def _spawn_refresh(self) -> None:
-        with self._thread_lock:
-            if self._refresh_thread is not None:
-                # a rebuild is running: ask it to go again before exiting
-                # (its exit decision happens under this same lock, so the
-                # request can never fall into a teardown window)
-                self._refresh_again = True
-                return
-            t = threading.Thread(target=self._refresh_worker, daemon=True,
-                                 name="lims-snapshot-refresh")
-            self._refresh_thread = t
-        t.start()
-
-    def _refresh_worker(self) -> None:
-        while True:
-            self.refresh()
-            with self._thread_lock:
-                if not self._refresh_again:
-                    self._refresh_thread = None
-                    return
-                self._refresh_again = False
-
-    def wait_refresh(self) -> None:
-        """Block until every requested background refresh has landed."""
-        while True:
-            with self._thread_lock:
-                t = self._refresh_thread
-            if t is None:
-                return
-            t.join()
-
+from ..serving.engine import ServingEngine
 
 __all__ = ["ServingEngine"]

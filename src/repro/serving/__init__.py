@@ -1,0 +1,25 @@
+"""The layered serving stack (DESIGN.md §9).
+
+Request path, top to bottom::
+
+    ServingFrontend   dynamic batching + admission control (frontend)
+        PlanRouter    one CandidatePlan per batch, sub-batches to
+                      replicas by TriPrune cluster ownership (router)
+        ReplicaSet    executors over the snapshot pytree, one per
+                      device, per-replica load stats (replicas)
+    ServingEngine     snapshot lifecycle: updates, refresh, storage,
+                      compaction (engine)
+
+Every layer preserves the exactness contract: per-query results are
+independent of batchmates and of which replica executes them, so a
+query submitted through the frontend returns bit-identical results to
+a direct ``QueryExecutor`` call.  ``repro.core.serving`` remains as a
+compatibility shim for ``ServingEngine``.
+"""
+from .engine import ServingEngine
+from .frontend import FrontendOverload, ServingFrontend
+from .replicas import Replica, ReplicaSet
+from .router import PlanRouter
+
+__all__ = ["ServingEngine", "ServingFrontend", "FrontendOverload",
+           "Replica", "ReplicaSet", "PlanRouter"]

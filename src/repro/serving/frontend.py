@@ -1,0 +1,255 @@
+"""Layer 4 of the serving stack: the request frontend.
+
+Kernels want batches; users send single queries.  ``ServingFrontend``
+bridges the two with *dynamic batching*: submitters enqueue one query
+each and block; a batcher thread coalesces compatible requests — same
+kind, same k — into one kernel-shaped batch, dispatching when the batch
+fills (``max_batch``) or the oldest request's latency budget (``slo_ms``)
+expires, whichever is first.  Per-query results are independent of
+batchmates (the router's exactness argument, DESIGN.md §9), so a
+coalesced query returns bit-identical results to a direct
+``QueryExecutor`` call — pinned by tests under concurrent submitters.
+
+Admission control is shed-on-overload: the queue is bounded
+(``max_queue``) and a submit that finds it full fails *immediately*
+with :class:`FrontendOverload` rather than queueing into a latency it
+can't meet — the standard contract for an SLO-bound service (callers
+retry against another frontend or back off).  Shed requests cost the
+engine nothing: no plan, no kernel launch, no page IO.
+
+Behind the batcher sits the plan-driven router over a replica set
+(``router``/``replicas``); the frontend tracks its engine's snapshot
+generation and rebuilds the replica set after a refresh lands, so
+batches never mix generations (each batch runs on the replica set it
+was dispatched to — the same atomic-grab contract the engine's own
+query methods keep).
+
+``pause()``/``resume()`` hold the batcher between dispatches —
+deterministic coalescing and overload in tests and benchmarks, never
+needed in production.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from .replicas import ReplicaSet
+from .router import PlanRouter
+
+
+class FrontendOverload(RuntimeError):
+    """Admission control shed this request: the queue was full."""
+
+
+class _Request:
+    __slots__ = ("kind", "q", "arg", "t_in", "t_run", "event", "result",
+                 "error")
+
+    def __init__(self, kind: str, q: np.ndarray, arg):
+        self.kind = kind
+        self.q = q
+        self.arg = arg
+        self.t_in = time.monotonic()
+        self.t_run = None
+        self.event = threading.Event()
+        self.result = None
+        self.error: BaseException | None = None
+
+    @property
+    def key(self):
+        # range queries coalesce regardless of radius (radii are a (B,)
+        # plan input); kNN batches share k (k shapes outputs and plan)
+        return (self.kind, self.arg if self.kind == "knn" else None)
+
+
+class ServingFrontend:
+    """Dynamic-batching, admission-controlled frontend over an engine
+    (or a bare executor — anything with ``.executor``/``.snap``)."""
+
+    def __init__(self, target, *, n_replicas: int | None = None,
+                 max_batch: int = 32, slo_ms: float = 2.0,
+                 max_queue: int = 256, prefetch: str | None = None):
+        if max_batch < 1 or max_queue < 1:
+            raise ValueError("max_batch and max_queue must be >= 1")
+        # engine-like targets expose .executor + .generation; a bare
+        # executor serves one frozen generation
+        self._engine = target if hasattr(target, "executor") else None
+        self._executor = None if self._engine is not None else target
+        self._n_replicas = n_replicas
+        self._prefetch = prefetch
+        self._max_batch = int(max_batch)
+        self._slo = float(slo_ms) / 1e3
+        self._max_queue = int(max_queue)
+        self._cv = threading.Condition()
+        self._pending: list[_Request] = []
+        self._paused = False
+        self._closed = False
+        # metrics (all mutated under self._cv)
+        self._submitted = 0
+        self._shed = 0
+        self._batch_sizes: list[int] = []
+        self._waits: list[float] = []
+        self._router_obj: PlanRouter | None = None
+        self._gen: int | None = None
+        self._batcher = threading.Thread(
+            target=self._batch_loop, daemon=True, name="lims-frontend")
+        self._batcher.start()
+
+    # ------------------------------------------------------------- submit
+    def range_query(self, q, r: float):
+        """Submit one range query; blocks until its batch returns.
+        Returns ``(ids, dists)`` exactly as ``QueryExecutor.range_query``.
+        """
+        return self._submit(_Request(
+            "range", np.asarray(q, np.float64), float(r)))
+
+    def knn_query(self, q, k: int):
+        """Submit one kNN query; blocks until its batch returns."""
+        return self._submit(_Request(
+            "knn", np.asarray(q, np.float64), int(k)))
+
+    def _submit(self, req: _Request):
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("frontend is closed")
+            if len(self._pending) >= self._max_queue:
+                self._shed += 1
+                raise FrontendOverload(
+                    f"queue full ({self._max_queue} pending)")
+            self._submitted += 1
+            self._pending.append(req)
+            self._cv.notify_all()
+        req.event.wait()
+        if req.error is not None:
+            raise req.error
+        return req.result
+
+    # ------------------------------------------------------------ batcher
+    def _batch_loop(self) -> None:
+        while True:
+            batch = self._next_batch()
+            if batch is None:
+                return
+            self._execute(batch)
+
+    def _next_batch(self) -> list | None:
+        """Block until a batch is due: the oldest request's key gathers
+        batchmates until ``max_batch`` or its SLO deadline."""
+        with self._cv:
+            while not self._closed and (self._paused or not self._pending):
+                self._cv.wait()
+            if not self._pending:       # closed and drained
+                return None
+            first = self._pending[0]
+            deadline = first.t_in + self._slo
+            while not self._closed:
+                n = sum(1 for r in self._pending if r.key == first.key)
+                left = deadline - time.monotonic()
+                if n >= self._max_batch or left <= 0:
+                    break
+                self._cv.wait(left)
+            batch = [r for r in self._pending
+                     if r.key == first.key][:self._max_batch]
+            for r in batch:
+                self._pending.remove(r)
+            return batch
+
+    def _execute(self, batch: list) -> None:
+        t_run = time.monotonic()
+        try:
+            router = self._router()
+            Q = np.stack([r.q for r in batch])
+            if batch[0].kind == "range":
+                rs = np.array([r.arg for r in batch], np.float64)
+                for r, res in zip(batch, router.range_query_batch(Q, rs)):
+                    r.result = res
+            else:
+                ids, ds = router.knn_query_batch(Q, batch[0].arg)
+                for j, r in enumerate(batch):
+                    r.result = (ids[j], ds[j])
+        except BaseException as e:
+            for r in batch:
+                r.error = e
+        finally:
+            with self._cv:
+                self._batch_sizes.append(len(batch))
+                self._waits.extend(t_run - r.t_in for r in batch)
+            for r in batch:
+                r.t_run = t_run
+                r.event.set()
+
+    def _router(self) -> PlanRouter:
+        """The router for the current snapshot generation (batcher-thread
+        only); a landed refresh rebuilds the replica set."""
+        gen = self._engine.generation if self._engine is not None else 0
+        if self._router_obj is None or gen != self._gen:
+            ex = self._engine.executor if self._engine is not None \
+                else self._executor
+            self._router_obj = PlanRouter(ReplicaSet(
+                ex.snap, n_replicas=self._n_replicas,
+                prefetch=self._prefetch))
+            self._gen = gen
+        return self._router_obj
+
+    # ---------------------------------------------------------- lifecycle
+    def pause(self) -> None:
+        """Hold the batcher between dispatches (tests/benchmarks)."""
+        with self._cv:
+            self._paused = True
+
+    def resume(self) -> None:
+        with self._cv:
+            self._paused = False
+            self._cv.notify_all()
+
+    def close(self, timeout: float = 30.0) -> None:
+        """Stop accepting requests, drain what's queued, join the
+        batcher."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        self._batcher.join(timeout)
+
+    def __enter__(self) -> "ServingFrontend":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------ metrics
+    def metrics(self) -> dict:
+        """Frontend-side serving metrics: achieved batch sizes, queue
+        wait percentiles, shed rate — plus per-replica load when the
+        router has run."""
+        with self._cv:
+            sizes = list(self._batch_sizes)
+            waits = sorted(self._waits)
+            submitted, shed = self._submitted, self._shed
+        router = self._router_obj
+
+        def pct(p: float) -> float:
+            if not waits:
+                return 0.0
+            return waits[min(len(waits) - 1,
+                             int(round(p * (len(waits) - 1))))]
+
+        out = {
+            "submitted": submitted,
+            "shed": shed,
+            "shed_rate": round(shed / max(submitted + shed, 1), 4),
+            "batches": len(sizes),
+            "batch_size_mean": round(float(np.mean(sizes)), 2)
+            if sizes else 0.0,
+            "batch_size_max": max(sizes) if sizes else 0,
+            "coalesced_batches": sum(1 for s in sizes if s >= 2),
+            "queue_wait_ms_p50": round(pct(0.50) * 1e3, 3),
+            "queue_wait_ms_p99": round(pct(0.99) * 1e3, 3),
+        }
+        if router is not None:
+            out["routing"] = router.load_stats()
+        return out
+
+
+__all__ = ["ServingFrontend", "FrontendOverload"]

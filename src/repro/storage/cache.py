@@ -9,6 +9,21 @@ references *new* page ids for rewritten clusters) and not across
 compactions (a compacted generation lives in a *new* file, so its
 restarted page ids can never collide with a pinned view's old ones).
 
+Schedule-aware eviction (DESIGN.md §9): a query batch's ``CandidatePlan``
+knows every page its remaining rounds will touch, so the paged backend
+*pins* them for the batch's duration — ``pin``/``unpin`` hold a
+per-page count, and capacity eviction skips pinned pages (the coldest
+*unpinned* page goes instead).  Blind LRU would evict a round's pages
+between its fetch and its gather under a squeezed capacity, or drop
+earlier rounds' pages a later round is guaranteed to re-demand; pinning
+replaces that with the plan's own schedule.  Pinning never blocks an
+insert — when every resident page is pinned the cache briefly overflows
+capacity (bounded by one batch's working set) rather than corrupt a
+planned fetch.  ``unpin`` restores plain LRU: the page keeps the
+recency position its accesses earned and becomes evictable again.
+``REPRO_CACHE_PIN=off`` disables plan pinning process-wide (the bench's
+blind-LRU baseline).
+
 ``CacheStats`` carries two families of counters:
 
   * cache-level IO: requests / hits / misses (= actual page reads) /
@@ -20,12 +35,20 @@ restarted page ids can never collide with a pinned view's old ones).
 """
 from __future__ import annotations
 
+import os
 from collections import OrderedDict
 from dataclasses import dataclass, field
 
 import numpy as np
 
 DEFAULT_CACHE_PAGES = 4096
+
+
+def cache_pin_mode() -> bool:
+    """Whether planned batches pin their scheduled pages (default on).
+    ``REPRO_CACHE_PIN=off`` reverts to blind LRU — the bench baseline."""
+    return os.environ.get("REPRO_CACHE_PIN", "on").lower() \
+        not in ("off", "0", "no")
 
 
 @dataclass
@@ -80,6 +103,7 @@ class LRUPageCache:
     capacity_pages: int | None = DEFAULT_CACHE_PAGES
     _pages: OrderedDict = field(default_factory=OrderedDict)
     access: dict = field(default_factory=dict)
+    _pins: dict = field(default_factory=dict)   # pid → pin count
 
     def __len__(self) -> int:
         return len(self._pages)
@@ -97,24 +121,67 @@ class LRUPageCache:
         return self._pages.get(pid)
 
     def put(self, pid: int, block: np.ndarray) -> int:
-        """Insert a page; returns how many pages were evicted."""
+        """Insert a page; returns how many pages were evicted.
+
+        Eviction is pin-aware: the coldest *unpinned* page goes first;
+        when every resident page is pinned the cache overflows capacity
+        rather than break a planned fetch (bounded by one batch's
+        pinned working set)."""
         self._pages[pid] = block
         self._pages.move_to_end(pid)
+        return self._shrink()
+
+    def _shrink(self) -> int:
+        """Evict coldest unpinned pages until back under capacity; an
+        all-pinned cache stays overflowed (bounded by one batch's
+        working set) until its pins release."""
         evicted = 0
         if self.capacity_pages is not None:
             while len(self._pages) > self.capacity_pages:
-                self._pages.popitem(last=False)
+                victim = next(
+                    (k for k in self._pages if k not in self._pins), None)
+                if victim is None:          # all pinned → allow overflow
+                    break
+                del self._pages[victim]
                 evicted += 1
         return evicted
 
+    def pin(self, pids) -> None:
+        """Hold the given pages against capacity eviction (refcounted).
+        Pinning a non-resident page is allowed: the hold applies the
+        moment the page is inserted."""
+        for pid in pids:
+            self._pins[pid] = self._pins.get(pid, 0) + 1
+
+    def unpin(self, pids) -> int:
+        """Release one hold per page; at zero the page rejoins plain LRU
+        at whatever recency position its accesses earned.  Unknown pids
+        are ignored (a pinned page may have been cleared meanwhile).
+        Returns pages evicted clearing any pin-era overflow."""
+        for pid in pids:
+            c = self._pins.get(pid, 0) - 1
+            if c > 0:
+                self._pins[pid] = c
+            else:
+                self._pins.pop(pid, None)
+        return self._shrink()
+
+    @property
+    def pinned(self) -> int:
+        """Number of distinct pages currently held."""
+        return len(self._pins)
+
     def clear(self) -> None:
         """Drop every resident page (access counters are kept — they
-        describe the workload, not the residency)."""
+        describe the workload, not the residency; pins are dropped with
+        the pages they guarded)."""
         self._pages.clear()
+        self._pins.clear()
 
     def hottest(self, n: int = 10) -> list:
         """(page id, access count) for the n most-accessed pages."""
         return sorted(self.access.items(), key=lambda kv: -kv[1])[:n]
 
 
-__all__ = ["LRUPageCache", "CacheStats", "DEFAULT_CACHE_PAGES"]
+__all__ = ["LRUPageCache", "CacheStats", "DEFAULT_CACHE_PAGES",
+           "cache_pin_mode"]

@@ -26,9 +26,20 @@ proof the overlap actually happened).
 
 ``REPRO_PREFETCH=async`` enables the prefetcher on paged executors;
 unset/anything else keeps today's fully synchronous behavior.
+
+Shutdown: the worker is a daemon thread, but daemon teardown at
+interpreter exit can kill it mid-``fetch_pages`` while library state is
+being finalized — so ``shutdown_prefetch`` (registered with ``atexit``)
+stops it deliberately: it sets the shutdown flag, enqueues a sentinel,
+and joins with a timeout.  In-flight IOPlans are *dropped*, not drained
+— speculative IO has no correctness obligation and exit shouldn't wait
+on disk — and every dropped plan is counted on its prefetcher
+(``dropped_plans`` / ``pages_dropped`` in ``snapshot()``), so a bench
+or test that cares can see exactly what the close threw away.
 """
 from __future__ import annotations
 
+import atexit
 import os
 import queue
 import threading
@@ -66,15 +77,32 @@ class PrefetchTicket:
 _QUEUE: queue.SimpleQueue = queue.SimpleQueue()
 _WORKER_LOCK = threading.Lock()
 _WORKER: threading.Thread | None = None
+_SHUTDOWN = threading.Event()
+_SENTINEL = object()
+
+
+def _drop(prefetcher, pages) -> None:
+    """Account a plan the shutdown discarded (drain markers — empty
+    page lists — are control flow, not dropped IO)."""
+    if prefetcher is not None and len(pages):
+        with prefetcher._lock:
+            prefetcher.dropped_plans += 1
+            prefetcher.pages_dropped += len(pages)
 
 
 def _worker_loop() -> None:
     while True:
-        prefetcher, pages, ev = _QUEUE.get()
+        item = _QUEUE.get()
+        if item is _SENTINEL:
+            return
+        prefetcher, pages, ev = item
         try:
-            prefetcher.store.fetch_pages(pages, record=False)
-            with prefetcher._lock:
-                prefetcher.pages_fetched += len(pages)
+            if _SHUTDOWN.is_set():
+                _drop(prefetcher, pages)
+            elif len(pages):
+                prefetcher.store.fetch_pages(pages, record=False)
+                with prefetcher._lock:
+                    prefetcher.pages_fetched += len(pages)
         except Exception:
             # a failed speculative read is a missed optimization, not an
             # error: the demand fetch will read (and raise) for real if
@@ -86,11 +114,45 @@ def _worker_loop() -> None:
 
 def _ensure_worker() -> None:
     global _WORKER
+    if _SHUTDOWN.is_set():
+        return                          # closing: no restarts
     with _WORKER_LOCK:
         if _WORKER is None or not _WORKER.is_alive():
             _WORKER = threading.Thread(
                 target=_worker_loop, daemon=True, name="lims-page-prefetch")
             _WORKER.start()
+
+
+def shutdown_prefetch(timeout: float = 2.0) -> bool:
+    """Stop the shared worker deliberately (atexit hook; callable early
+    by tests).  Queued plans behind the flag are dropped-and-counted by
+    the worker on its way to the sentinel; the join timeout bounds exit
+    latency if the worker is wedged mid-read.  Returns True when the
+    worker is (or was already) fully stopped.  Irreversible for the
+    process: later ``submit`` calls drop immediately."""
+    global _WORKER
+    _SHUTDOWN.set()
+    with _WORKER_LOCK:
+        w = _WORKER
+        if w is None or not w.is_alive():
+            _WORKER = None
+            return True
+        _QUEUE.put(_SENTINEL)
+        w.join(timeout)
+        stopped = not w.is_alive()
+        if stopped:
+            _WORKER = None
+        return stopped
+
+
+def _restart_for_tests() -> None:
+    """Undo a test-invoked shutdown so the rest of the suite keeps its
+    prefetcher (production exits never restart — atexit is terminal)."""
+    shutdown_prefetch()
+    _SHUTDOWN.clear()
+
+
+atexit.register(shutdown_prefetch)
 
 
 class PagePrefetcher:
@@ -108,10 +170,14 @@ class PagePrefetcher:
         self.pages_fetched = 0
         self.demand_hits = 0         # prefetched pages a round demanded
         self.overlapped_rounds = 0   # rounds whose prefetch beat demand
+        self.dropped_plans = 0       # plans the shutdown discarded
+        self.pages_dropped = 0
 
     # ------------------------------------------------------------------ api
     def submit(self, pages: np.ndarray) -> PrefetchTicket:
-        """Queue a background fetch; returns immediately."""
+        """Queue a background fetch; returns immediately.  After
+        ``shutdown_prefetch`` the plan is dropped-and-counted instead
+        (its ticket completes at once, with nothing fetched)."""
         pages = np.asarray(pages, np.int64)
         t = PrefetchTicket(pages)
         if len(pages) == 0:
@@ -120,6 +186,10 @@ class PagePrefetcher:
         with self._lock:
             self.submitted += 1
             self.pages_submitted += len(pages)
+        if _SHUTDOWN.is_set():
+            _drop(self, pages)
+            t._event.set()
+            return t
         _ensure_worker()
         _QUEUE.put((self, pages, t._event))
         return t
@@ -143,7 +213,10 @@ class PagePrefetcher:
                 self.overlapped_rounds += 1
 
     def drain(self) -> None:
-        """Block until every prefetch queued so far has completed."""
+        """Block until every prefetch queued so far has completed (a
+        shut-down worker has nothing left to wait for)."""
+        if _SHUTDOWN.is_set():
+            return
         ev = threading.Event()
         _ensure_worker()
         _QUEUE.put((self, np.empty(0, np.int64), ev))
@@ -155,6 +228,7 @@ class PagePrefetcher:
             self.submitted = self.pages_submitted = 0
             self.pages_fetched = self.demand_hits = 0
             self.overlapped_rounds = 0
+            self.dropped_plans = self.pages_dropped = 0
 
     def snapshot(self) -> dict:
         with self._lock:
@@ -167,7 +241,10 @@ class PagePrefetcher:
                 "hit_rate": round(
                     self.demand_hits / max(self.pages_submitted, 1), 4),
                 "overlapped_rounds": self.overlapped_rounds,
+                "dropped_plans": self.dropped_plans,
+                "pages_dropped": self.pages_dropped,
             }
 
 
-__all__ = ["PagePrefetcher", "PrefetchTicket", "prefetch_mode"]
+__all__ = ["PagePrefetcher", "PrefetchTicket", "prefetch_mode",
+           "shutdown_prefetch"]

@@ -275,6 +275,51 @@ class PagedStore:
         (and not at all when cache-resident)."""
         self.fetch_pages(plan.pages, file=file)
 
+    # ------------------------------------------------------ schedule pins
+    def pin_pages(self, pages: np.ndarray, file: str | None = None) -> None:
+        """Hold ``pages`` against capacity eviction for a planned batch
+        (refcounted; pinning before the fetch is fine — the hold applies
+        on insert).  Callers must pair with ``unpin_pages`` — the paged
+        backend does so in a ``finally`` so an executor error can't leak
+        a batch's pins."""
+        with self._lock:
+            file = file if file is not None else self.manifest.pages_file
+            self.cache.pin([(file, int(p)) for p in np.asarray(pages)])
+
+    def unpin_pages(self, pages: np.ndarray,
+                    file: str | None = None) -> None:
+        """Release one batch's holds; pages rejoin plain LRU at the
+        recency their accesses earned, and any pin-era overflow evicts
+        immediately (counted with the regular eviction stats)."""
+        with self._lock:
+            file = file if file is not None else self.manifest.pages_file
+            self.stats.evictions += self.cache.unpin(
+                [(file, int(p)) for p in np.asarray(pages)])
+
+    def cluster_heat(self, layout: PageLayout | None = None,
+                     file: str | None = None) -> np.ndarray:
+        """(K,) page-cache access counts folded per cluster extent — the
+        demand signal the router's replica placement consumes (hot
+        clusters get replicated / reassigned first).  Counts accumulate
+        across the store's lifetime; callers diff snapshots for a rate.
+        """
+        with self._lock:
+            lay = layout if layout is not None else self.layout
+            file = file if file is not None else self.manifest.pages_file
+            ppc = lay.pages_per_cluster
+            K = len(lay.extents)
+            owner = {}                      # page id → cluster (this gen)
+            for k in range(K):
+                base = int(lay.extents[k])
+                for p in range(base, base + ppc):
+                    owner[p] = k
+            heat = np.zeros(K, np.int64)
+            for (f, pid), cnt in self.cache.access.items():
+                k = owner.get(pid) if f == file else None
+                if k is not None:
+                    heat[k] += cnt
+            return heat
+
     def gather(self, slots: np.ndarray, layout: PageLayout | None = None,
                file: str | None = None) -> np.ndarray:
         """(len(slots), d) f64 rows for flat slot ids, through the cache.
@@ -466,6 +511,15 @@ class StoreView:
 
     def fetch_pages(self, pages: np.ndarray, record: bool = True) -> None:
         self.base.fetch_pages(pages, file=self.file, record=record)
+
+    def pin_pages(self, pages: np.ndarray) -> None:
+        self.base.pin_pages(pages, file=self.file)
+
+    def unpin_pages(self, pages: np.ndarray) -> None:
+        self.base.unpin_pages(pages, file=self.file)
+
+    def cluster_heat(self) -> np.ndarray:
+        return self.base.cluster_heat(layout=self.layout, file=self.file)
 
     def __getattr__(self, name):
         # everything generation-agnostic (stats, cache, manifest,

@@ -500,6 +500,127 @@ def test_prefetch_engine_wiring(tmp_path):
     assert se.executor.prefetcher is not None   # survives the swap
 
 
+# -------------------------------------------------------- schedule pinning
+def test_pinned_pages_survive_cache_squeeze():
+    """Unit pin/evict semantics: capacity eviction takes the coldest
+    *unpinned* page; an all-pinned cache overflows instead of breaking
+    a hold; releasing the pins shrinks back under capacity."""
+    from repro.storage import LRUPageCache
+    c = LRUPageCache(capacity_pages=2)
+    blk = np.zeros((1, 1))
+    c.put("a", blk), c.put("b", blk)
+    c.pin(["a"])
+    assert c.put("c", blk) == 1                 # "b" (coldest unpinned)
+    assert c.peek("a") is not None and c.peek("b") is None
+    c.pin(["c"])
+    # "a"/"c" pinned → the only evictable page is "d" itself
+    assert c.put("d", blk) == 1
+    assert c.peek("a") is not None and c.peek("c") is not None
+    c.pin(["d", "e"])                           # pin non-resident pages
+    c.put("d", blk)
+    assert len(c) == 3 and c.pinned == 4        # all pinned: overflowed
+    assert c.put("e", blk) == 0                 # nothing evictable
+    assert len(c) == 4
+    assert c.unpin(["a", "c", "d", "e"]) == 2   # shrink back to capacity
+    assert len(c) == 2 and c.pinned == 0
+
+
+def test_unpin_restores_lru_order():
+    """A pinned page earns recency like any other; after unpin it is
+    evicted exactly when plain LRU would evict it — no residual
+    privilege, no penalty."""
+    from repro.storage import LRUPageCache
+    c = LRUPageCache(capacity_pages=3)
+    blk = np.zeros((1, 1))
+    for k in ("a", "b", "c"):
+        c.put(k, blk)
+    c.pin(["a"])
+    c.touch("a")                                # "a" now hottest
+    c.unpin(["a"])
+    c.put("d", blk)                             # plain LRU: "b" goes
+    assert c.peek("b") is None
+    assert all(c.peek(k) is not None for k in ("a", "c", "d"))
+
+
+def test_plan_pins_released_after_batch(setup, monkeypatch):
+    """A batch pins its planned pages for its whole execution (fetch →
+    gather → exact refinement) and releases them all afterwards — on
+    success AND when the executor errors mid-batch."""
+    X, ix, snap, path = setup
+    ex = QueryExecutor(LIMSSnapshot.load(path, store=True, cache_pages=4))
+    store = ex.snap.store
+    Q = _queries(X, 5, seed=23)
+    rs = _radii(X, Q)
+    mem = QueryExecutor(snap)
+    a = mem.range_query_batch(Q, rs)
+    b = ex.range_query_batch(Q, rs)
+    for (ai, ad), (bi, bd) in zip(a, b):
+        assert np.array_equal(ai, bi) and np.array_equal(ad, bd)
+    assert ex.last_io["pinned_pages"] > 0
+    assert store.cache.pinned == 0              # fully released
+    assert len(store.cache) <= 4                # overflow cleared too
+    ids_m, _ = mem.knn_query_batch(Q, 6)
+    ids_p, _ = ex.knn_query_batch(Q, 6)
+    assert np.array_equal(ids_m, ids_p)
+    assert ex.last_io["pinned_pages"] > 0
+    assert store.cache.pinned == 0
+    # executor error mid-refinement: the finally still drains the plan
+    def boom(idx):
+        raise RuntimeError("refinement died")
+    monkeypatch.setattr(ex, "_refine_rows", boom)
+    with pytest.raises(RuntimeError, match="refinement died"):
+        ex.range_query_batch(Q, rs)
+    assert store.cache.pinned == 0
+    with pytest.raises(RuntimeError, match="refinement died"):
+        ex.knn_query_batch(Q, 6)
+    assert store.cache.pinned == 0
+
+
+def test_pin_mode_off_is_blind_lru(setup, monkeypatch):
+    """``REPRO_CACHE_PIN=off`` (the bench's baseline) takes no holds at
+    all — and results are unchanged either way."""
+    X, ix, snap, path = setup
+    monkeypatch.setenv("REPRO_CACHE_PIN", "off")
+    ex = QueryExecutor(LIMSSnapshot.load(path, store=True, cache_pages=4))
+    Q = _queries(X, 4, seed=29)
+    ids_p, ds_p = ex.knn_query_batch(Q, 5)
+    assert ex.last_io["pinned_pages"] == 0
+    assert ex.snap.store.cache.pinned == 0
+    ids_m, ds_m = QueryExecutor(snap).knn_query_batch(Q, 5)
+    assert np.array_equal(ids_p, ids_m) and np.array_equal(ds_p, ds_m)
+
+
+# -------------------------------------------------------- prefetch shutdown
+def test_prefetch_shutdown_drops_and_counts(setup):
+    """Satellite requirement: the prefetch daemon stops deliberately —
+    queued/in-flight plans are dropped (not drained), the drop is
+    visible in the prefetcher's stats, and a post-shutdown submit
+    degrades to an immediate counted drop instead of leaking work."""
+    import repro.storage.prefetch as pfm
+    from repro.storage import PagePrefetcher, shutdown_prefetch
+    X, ix, snap, path = setup
+    store = PagedStore(path)
+    pf = PagePrefetcher(store)
+    try:
+        t = pf.submit(np.arange(3, dtype=np.int64))
+        assert t.wait(5.0)
+        assert pf.pages_fetched == 3
+        assert shutdown_prefetch(timeout=5.0)   # joined within timeout
+        t2 = pf.submit(np.arange(4, dtype=np.int64))
+        assert t2.done()                        # completes at once...
+        snap_d = pf.snapshot()
+        assert snap_d["dropped_plans"] == 1     # ...but dropped, counted
+        assert snap_d["pages_dropped"] == 4
+        assert pf.pages_fetched == 3            # nothing fetched for it
+        pf.drain()                              # no-op, must not hang
+        assert shutdown_prefetch()              # idempotent
+    finally:
+        pfm._restart_for_tests()                # rest of the suite
+    t3 = pf.submit(np.arange(2, dtype=np.int64))
+    assert t3.wait(5.0)
+    assert pf.pages_fetched == 5
+
+
 # ----------------------------------------------------------------- real IO
 def test_drop_os_cache_best_effort(setup):
     """``--real-io`` support: dropping the OS page cache is advisory and
