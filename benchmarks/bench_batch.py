@@ -61,7 +61,13 @@ SERVING_CONFIGS = tuple(
     [(str(nd), nd, {}) for nd in SERVING_DEVICES]
     + [("paged", 1, {"REPRO_STORAGE": "paged"}),
        ("paged-prefetch", 1, {"REPRO_STORAGE": "paged",
-                              "REPRO_PREFETCH": "async"})])
+                              "REPRO_PREFETCH": "async"}),
+       # the compiled XLA-CPU lane (interpret=off): jitted-XLA kernels +
+       # autotuned tiles — the "fast as the hardware allows" lane on a
+       # CPU-only host, held to the same golden no-regression bar (the
+       # goldens run in the same lane inside the worker, so the bar
+       # compares plan/execute vs the PR-4 drivers at compiled speed)
+       ("xla-compiled", 1, {"REPRO_INTERPRET": "off"})])
 
 
 def _bench(fn, reps: int) -> float:
@@ -233,6 +239,7 @@ def serving_worker() -> dict:
     import jax
     from repro.data.datasets import gauss_mix
     from repro.core.serving import ServingEngine
+    from repro.kernels.dispatch import kernel_mode
 
     n = 4_000 if QUICK else 12_000
     d = 8
@@ -268,6 +275,9 @@ def serving_worker() -> dict:
         "n_shards": getattr(ex, "n_shards", 1),
         "executor": type(ex).__name__,
         "n": n, "d": d, "batch": BATCH, "quick": QUICK,
+        # which kernel lane answered (interpret / xla / pallas) — the
+        # compiled XLA-CPU config reports "xla" here
+        "kernel_mode": kernel_mode(),
         "range_qps": round(BATCH / t_range, 1),
         "knn_qps": round(BATCH / t_knn, 1),
         # the plan/execute acceptance metrics: growing-radius rounds per
@@ -296,7 +306,8 @@ def serving_worker() -> dict:
         # cache is additionally dropped (posix_fadvise DONTNEED) before
         # each cold pass, so page misses hit the device, not the
         # kernel's cache.
-        real_io = bool(os.environ.get("REPRO_REAL_IO"))
+        from repro import env as repro_env
+        real_io = repro_env.get("REPRO_REAL_IO") == "1"
         st = se.store
 
         def _cold():
@@ -412,6 +423,7 @@ def bench_serving_scaling(configs=SERVING_CONFIGS,
         env["XLA_FLAGS"] = " ".join(flags)
         env["REPRO_STORAGE"] = ""
         env["REPRO_PREFETCH"] = ""
+        env["REPRO_INTERPRET"] = ""
         env.update(extra_env)
         if real_io:
             env["REPRO_REAL_IO"] = "1"

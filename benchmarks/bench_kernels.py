@@ -1,58 +1,241 @@
-"""Kernel-level microbenches: the pure-jnp oracle path (what the CPU
-actually executes — Pallas interpret mode adds Python overhead and is for
-validation, not speed) plus batched-LIMS query throughput built on it."""
+"""Kernel-stage lane comparison: interpret vs compiled-XLA, static vs
+autotuned tiles, staged vs fused.
+
+For each kernel stage (pdist, rankeval, range_filter) this bench times:
+
+* ``interpret``     — Pallas interpret mode with today's heuristics
+                      (the validation lane every prior BENCH number
+                      used);
+* ``xla-static``    — the compiled XLA-CPU lane (``REPRO_INTERPRET=off``)
+                      with the static heuristic tiles
+                      (``REPRO_AUTOTUNE=off``);
+* ``xla-autotuned`` — the compiled lane with tiles from the tuning table,
+                      tuned in-process for these exact shape buckets.
+
+Acceptance (asserted here, recorded in ``BENCH_kernels.json``): the
+autotuned tiles beat the static-heuristic tiles on >= 2 of the 3 stages.
+The static tile is itself a candidate in the tuner's grid, so a loss can
+only come from measurement noise — the assertion uses fresh *paired*
+interleaved timings, not the tuner's own numbers.
+
+Also measured: the fused ``pdist_rankeval`` plan stage against its
+staged two-launch equivalent (same lane, both ways), and the per-stage
+roofline report (``repro.roofline.pipeline``) over a real snapshot.
+
+Writes ``BENCH_kernels.json`` itself (structured payload; ``run.py``
+passes slug ``None`` for this section), and still prints the historical
+ref-path rows for continuity with earlier BENCH files.
+"""
 from __future__ import annotations
 
+import os
 import time
+from contextlib import contextmanager
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ref
+from repro.kernels import autotune, ref
 
-from .common import emit
+from .common import QUICK, emit, write_json
+
+# operand shapes per stage, full vs QUICK (keyed by QUICK flag)
+_SHAPES = {
+    False: {"q": 256, "p": 65_536, "d": 32, "g": 64, "b": 4_096, "c": 9},
+    True: {"q": 128, "p": 4_096, "d": 16, "g": 64, "b": 512, "c": 9},
+}
 
 
-def _time(fn, *args, reps=5):
-    out = fn(*args)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
+@contextmanager
+def _env(**kv):
+    old = {k: os.environ.get(k) for k in kv}
+    os.environ.update(kv)
+    try:
+        yield
+    finally:
+        for k, v in old.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+
+
+def _time(fn, reps=3):
+    jax.block_until_ready(fn())           # compile + warm
+    best = float("inf")
     for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _paired(fn_a, fn_b, reps=3):
+    """Interleaved best-of pair — the same discipline bench_batch uses
+    for the golden bars, so a one-off scheduler hiccup hits both sides
+    equally instead of deciding the comparison."""
+    jax.block_until_ready(fn_a())
+    jax.block_until_ready(fn_b())
+    best_a = best_b = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        best_b = min(best_b, time.perf_counter() - t0)
+    return best_a, best_b
+
+
+def _stage_thunks(sh):
+    """(name, thunk) per stage; ops resolves the lane and tiles from the
+    env at every call, so the same thunk times any lane."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    q = rng.standard_normal((sh["q"], sh["d"])).astype(np.float32)
+    p = rng.standard_normal((sh["p"], sh["d"])).astype(np.float32)
+    r = np.full((sh["q"],), 1.0, np.float32)
+    x = (rng.standard_normal((sh["g"], sh["b"])) * 2).astype(np.float32)
+    coef = (rng.standard_normal((sh["g"], sh["c"])) * 5).astype(np.float32)
+    lo = np.zeros(sh["g"], np.float32)
+    hi = np.ones(sh["g"], np.float32) * 4
+    n = np.full(sh["g"], 1e5, np.float32)
+    return [
+        ("pdist", lambda: ops.pdist(q, p)),
+        ("rankeval", lambda: ops.rankeval(x, coef, lo, hi, n)[0]),
+        ("range_filter", lambda: ops.range_filter(q, p, r)[0]),
+    ]
+
+
+def _fused_thunks(sh):
+    """(staged, fused) thunks computing the same plan quantities."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(1)
+    B, G = min(sh["q"], 256), sh["g"]
+    q = rng.standard_normal((B, sh["d"])).astype(np.float32)
+    piv = rng.standard_normal((G, sh["d"])).astype(np.float32)
+    coef = (rng.standard_normal((G, sh["c"])) * 5).astype(np.float32)
+    lo = np.zeros(G, np.float32)
+    hi = np.ones(G, np.float32) * 4
+    n = np.full(G, 1e5, np.float32)
+    rg = np.abs(rng.standard_normal(B)).astype(np.float32)
+
+    def staged():
+        dq = jnp.sqrt(jnp.maximum(ops.pdist(q, piv), 0.0))
+        xb = jnp.concatenate([(dq - rg[:, None]).T,
+                              (dq + rg[:, None]).T], axis=1)
+        rank, _ = ops.rankeval(xb, coef, lo, hi, n)
+        return dq, rank
+
+    def fused():
+        return ops.pdist_rankeval(q, piv, coef, lo, hi, n, rg)
+
+    return staged, fused
 
 
 def main() -> None:
+    sh = _SHAPES[QUICK]
+    reps = 2 if QUICK else 5
+    payload: dict = {"bench": "kernels", "quick": QUICK, "shapes": sh,
+                     "backend": jax.default_backend()}
+
+    # ---- lane timings per stage ---------------------------------------
+    lanes: dict[str, dict] = {}
+    with _env(REPRO_INTERPRET="on"):
+        for name, thunk in _stage_thunks(sh):
+            lanes.setdefault(name, {})["interpret_us"] = round(
+                _time(thunk, reps) * 1e6, 1)
+
+    # tune the table for these exact shape buckets (tune() searches the
+    # grid and persists the winner; explicit-tile thunks inside never
+    # consult the table, so there is no recursion)
+    with _env(REPRO_INTERPRET="off"):
+        tuned = {
+            "pdist": autotune.tune(
+                "pdist", "sql2",
+                {"q": sh["q"], "p": sh["p"], "d": sh["d"]}),
+            "rankeval": autotune.tune(
+                "rankeval", None,
+                {"g": sh["g"], "b": sh["b"], "c": sh["c"]}),
+            "range_filter": autotune.tune(
+                "range_filter", "sql2",
+                {"q": sh["q"], "p": sh["p"], "d": sh["d"]}),
+        }
+    payload["autotune"] = {k: dict(v["tiles"], tune_us=v["us"])
+                           for k, v in tuned.items()}
+    payload["tuning_cache"] = str(autotune.cache_path())
+
+    wins = 0
+    for name, thunk in _stage_thunks(sh):
+        def run_static(t=thunk):
+            with _env(REPRO_INTERPRET="off", REPRO_AUTOTUNE="off"):
+                return t()
+
+        def run_tuned(t=thunk):
+            with _env(REPRO_INTERPRET="off", REPRO_AUTOTUNE="on"):
+                return t()
+
+        t_s, t_t = _paired(run_static, run_tuned, reps)
+        lanes[name]["xla_static_us"] = round(t_s * 1e6, 1)
+        lanes[name]["xla_autotuned_us"] = round(t_t * 1e6, 1)
+        lanes[name]["tuned_beats_static"] = bool(t_t < t_s)
+        wins += int(t_t < t_s)
+        emit(f"kernels/{name}_lane", lanes[name]["xla_autotuned_us"],
+             f"interp={lanes[name]['interpret_us']} "
+             f"static={lanes[name]['xla_static_us']} "
+             f"tuned_wins={t_t < t_s}")
+    payload["lanes"] = lanes
+    payload["autotuned_wins"] = wins
+    # acceptance: tuned tiles beat the static heuristics on >= 2 of 3
+    # stages.  Gated to the CPU xla lane — that is the lane the shipped
+    # tuning table targets; on TPU/GPU the heuristics are MXU-aligned
+    # already and the table starts empty.  Full shapes only: at the
+    # QUICK sizes every stage is ~1-2ms and the comparison is noise.
+    if jax.default_backend() == "cpu" and not QUICK:
+        assert wins >= 2, (
+            f"autotuned tiles beat static heuristics on only {wins}/3 "
+            f"kernel stages: {lanes}")
+
+    # ---- fused vs staged plan stage -----------------------------------
+    fused_cmp = {}
+    for lane, lane_env in (("interpret", "on"), ("xla", "off")):
+        with _env(REPRO_INTERPRET=lane_env):
+            staged, fused = _fused_thunks(sh)
+            t_staged, t_fused = _paired(staged, fused, reps)
+        fused_cmp[lane] = {
+            "staged_us": round(t_staged * 1e6, 1),
+            "fused_us": round(t_fused * 1e6, 1),
+            "speedup": round(t_staged / t_fused, 2),
+        }
+    payload["fused_pdist_rankeval"] = fused_cmp
+    emit("kernels/fused_plan_xla", fused_cmp["xla"]["fused_us"],
+         f"staged={fused_cmp['xla']['staged_us']} "
+         f"speedup={fused_cmp['xla']['speedup']}x")
+
+    # ---- roofline over the real query pipeline ------------------------
+    from repro.roofline.pipeline import pipeline_report, render
+    payload["roofline"] = pipeline_report(quick=QUICK)
+    print(render(payload["roofline"]))
+
+    # ---- historical ref-path rows (trajectory continuity) -------------
     key = jax.random.PRNGKey(0)
-    q = jax.random.normal(key, (256, 32), jnp.float32)
-    p = jax.random.normal(jax.random.PRNGKey(1), (65_536, 32), jnp.float32)
-
+    q = jax.random.normal(key, (sh["q"], sh["d"]), jnp.float32)
+    p = jax.random.normal(jax.random.PRNGKey(1), (sh["p"], sh["d"]),
+                          jnp.float32)
     pd = jax.jit(lambda a, b: ref.pdist_ref(a, b, "sql2"))
-    dt = _time(pd, q, p)
-    emit("kernels/pdist_sql2_256x65k", dt * 1e6,
-         f"gflops={2*256*65536*32/dt/1e9:.1f}")
-
-    r = jnp.full((256,), 1.0)
-    rf = jax.jit(lambda a, b, rr: ref.range_filter_ref(a, b, rr)[0])
-    dt = _time(rf, q, p, r)
-    emit("kernels/range_filter_256x65k", dt * 1e6, "")
-
-    coef = jax.random.normal(key, (64, 9))
-    x = jax.random.uniform(key, (64, 4096))
-    lo = jnp.zeros(64)
-    hi = jnp.ones(64)
-    n = jnp.full(64, 1e5)
-    rk = jax.jit(lambda *a: ref.rankeval_ref(*a)[0])
-    dt = _time(rk, x, coef, lo, hi, n)
-    emit("kernels/rankeval_64x4096", dt * 1e6, "")
-
+    dt = _time(lambda: pd(q, p), reps)
+    emit(f"kernels/pdist_ref_{sh['q']}x{sh['p'] // 1024}k", dt * 1e6,
+         f"gflops={2 * sh['q'] * sh['p'] * sh['d'] / dt / 1e9:.1f}")
     qa = jax.random.normal(key, (1, 8, 1024, 64), jnp.float32)
     ka = jax.random.normal(key, (1, 2, 1024, 64), jnp.float32)
     at = jax.jit(lambda a, b, c: ref.attention_ref(a, b, c, causal=True))
-    dt = _time(at, qa, ka, ka)
+    dt = _time(lambda: at(qa, ka, ka), reps)
     emit("kernels/attention_1x8x1024", dt * 1e6, "")
+
+    if not QUICK:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        write_json(os.path.join(root, "BENCH_kernels.json"), payload)
 
 
 if __name__ == "__main__":

@@ -21,7 +21,8 @@ def main() -> None:
     from . import (bench_batch, bench_build, bench_kernels, bench_knn,
                    bench_misc, bench_range, common)
     sections = [
-        ("kernels", "kernels", bench_kernels.main),
+        # slug None: bench_kernels writes its own structured BENCH_kernels.json
+        ("kernels", None, bench_kernels.main),
         ("batch engine (serving)", "batch", bench_batch.main),
         # slug None: bench_build writes its own structured BENCH_build.json
         ("build/retrain (host vs device builder)", None, bench_build.main),

@@ -45,7 +45,6 @@ f64 distances on the host (DESIGN.md §3, §8).
 from __future__ import annotations
 
 import functools
-import os
 import threading
 from types import SimpleNamespace
 
@@ -56,8 +55,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from .. import env
 from ..kernels import ops
-from ..kernels.dispatch import default_interpret
 from ..sharding.logical import default_rules, serving_mesh, spec_for
 from ..storage import (PagePrefetcher, cache_pin_mode, plan_batch,
                        prefetch_mode)
@@ -198,16 +197,17 @@ def _knn_driver(ex) -> str:
     call so ``REPRO_KNN_DRIVER`` monkeypatching works on long-lived
     executors.  ``loop`` is the compiled ``lax.while_loop``; ``rounds``
     is the host-driven vectorized-round driver.  ``auto`` (default)
-    picks ``rounds`` on single-device XLA-CPU interpret — there the
-    jitted loop's slow lowerings (notably ``top_k``, ~40× its eager
-    dispatch) cost more than per-round host syncs ever did (the PR-5
-    ~433 → ~181 q/s regression) — and ``loop`` everywhere else: real
-    accelerators keep O(1) host syncs, and the sharded loop's per-round
-    collectives have no eager equivalent."""
-    mode = os.environ.get("REPRO_KNN_DRIVER", "auto").strip().lower()
+    picks ``rounds`` on single-device XLA-CPU — the while_loop/TopK
+    cliff is a property of XLA's CPU lowerings (notably ``top_k``, ~40×
+    its eager dispatch; the PR-5 ~433 → ~181 q/s regression), not of
+    interpret mode, so the compiled xla lane takes the same exit — and
+    ``loop`` everywhere else: real accelerators keep O(1) host syncs,
+    and the sharded loop's per-round collectives have no eager
+    equivalent."""
+    mode = env.get("REPRO_KNN_DRIVER")
     if mode in ("loop", "rounds"):
         return mode
-    if default_interpret() and getattr(ex, "n_shards", 1) <= 1:
+    if jax.default_backend() == "cpu" and getattr(ex, "n_shards", 1) <= 1:
         return "rounds"
     return "loop"
 

@@ -60,39 +60,54 @@ _BALL_ABS = 1e-3    # absolute inflation for the distance-ball prefilter
 _SEED_REL = 1e-3
 
 
-def plan_arrays(qf, rf, snap, n_rings: int):
+def plan_arrays(qf, rf, snap, n_rings: int, fused: bool | None = None):
     """The pure device plan math: (B, K·n_max) candidate mask + (B, K)
     cluster routing, written against a (possibly shard-local) snapshot
     pytree so the single-device executor and every ``shard_map`` shard
     run literally the same code.
 
-    One ``pdist`` launch gives query→pivot distances (TriPrune +
-    AreaLocate inputs); one ``rankeval`` launch evaluates all K·m rank
-    models on the lo/hi annulus boundaries of the whole batch, laid out
-    (G, 2B); the predicted ring box is widened by the certified per-group
-    rank-error bound so it is a guaranteed superset of the host's box.
+    Staged path: one ``pdist`` launch gives query→pivot distances
+    (TriPrune + AreaLocate inputs); one ``rankeval`` launch evaluates all
+    K·m rank models on the lo/hi annulus boundaries of the whole batch,
+    laid out (G, 2B).  On the compiled lanes (``fused=None`` defers to
+    ``dispatch.fused_plan_enabled``) both collapse into the single
+    ``ops.pdist_rankeval`` launch — bit-identical within a lane, pinned
+    by tests.  Either way the predicted ring box is widened by the
+    certified per-group rank-error bound so it is a guaranteed superset
+    of the host's box.
     """
     B = qf.shape[0]
     K, n_max, m = snap.rids.shape
     d = snap.rows.shape[-1]
     N = n_rings
     r_g = rf * (1.0 + _R_REL) + _R_ABS                      # (B,)
-    dq = jnp.sqrt(jnp.maximum(
-        ops.pdist(qf, snap.pivots.reshape(K * m, d)), 0.0))
+    if fused is None:
+        fused = ops.fused_plan_enabled()
+    G = K * m
+    if fused:
+        dq, rank_lo, rank_hi = ops.pdist_rankeval(
+            qf, snap.pivots.reshape(G, d), snap.coef.reshape(G, -1),
+            snap.model_lo.reshape(-1), snap.model_hi.reshape(-1),
+            snap.model_n.reshape(-1), r_g, n_rings=N)
+    else:
+        dq = jnp.sqrt(jnp.maximum(
+            ops.pdist(qf, snap.pivots.reshape(G, d)), 0.0))
+        # one rankeval launch: G groups × (lo | hi) boundaries of all B
+        x = jnp.concatenate([(dq - r_g[:, None]).T,
+                             (dq + r_g[:, None]).T], axis=1)  # (G, 2B)
+        rank, _ = ops.rankeval(
+            x, snap.coef.reshape(G, -1), snap.model_lo.reshape(-1),
+            snap.model_hi.reshape(-1), snap.model_n.reshape(-1),
+            n_rings=N)
+        rank_lo, rank_hi = rank[:, :B], rank[:, B:]
     dqr = dq.reshape(B, K, m)
     # TriPrune, per query per (local) cluster
     alive = jnp.all((dqr <= snap.dmax[None] + r_g[:, None, None]) &
                     (dqr >= snap.dmin[None] - r_g[:, None, None]),
                     axis=-1) & (snap.ns[None] > 0)          # (B, K)
-    # one rankeval launch: G groups × (lo | hi) boundaries of all B
-    x = jnp.concatenate([(dq - r_g[:, None]).T,
-                         (dq + r_g[:, None]).T], axis=1)    # (G, 2B)
-    rank, _ = ops.rankeval(
-        x, snap.coef.reshape(K * m, -1), snap.model_lo.reshape(-1),
-        snap.model_hi.reshape(-1), snap.model_n.reshape(-1), n_rings=N)
     err = snap.rank_err.reshape(-1)[:, None]                # (G, 1)
-    lo_rank = jnp.maximum(rank[:, :B].astype(jnp.float32) - err, 0.0)
-    hi_rank = rank[:, B:].astype(jnp.float32) + err
+    lo_rank = jnp.maximum(rank_lo.astype(jnp.float32) - err, 0.0)
+    hi_rank = rank_hi.astype(jnp.float32) + err
     w = snap.width[None, :, None].astype(jnp.float32)
     rid_lo = jnp.clip(jnp.floor(lo_rank.T.reshape(B, K, m) / w),
                       0, N - 1).astype(jnp.int32)

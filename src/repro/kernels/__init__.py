@@ -5,7 +5,8 @@ interpret mode against the pure-jnp oracle in ref.py; ops.py holds the
 jitted public wrappers (padding + platform dispatch).
 """
 from . import ops, ref
-from .ops import flash_attention, pdist, range_filter, rankeval
+from .ops import (flash_attention, pdist, pdist_rankeval, range_filter,
+                  rankeval)
 
 __all__ = ["ops", "ref", "pdist", "rankeval", "range_filter",
-           "flash_attention"]
+           "pdist_rankeval", "flash_attention"]

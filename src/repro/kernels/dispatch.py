@@ -1,31 +1,78 @@
-"""Backend dispatch policy for the Pallas kernels.
+"""Backend dispatch policy for the kernel pipeline.
 
-One place decides whether a ``pallas_call`` compiles or interprets:
+One place decides which of the three executable lanes a kernel call
+takes (:func:`kernel_mode`):
 
-  * TPU / GPU backends → compiled (``interpret=False``);
-  * CPU (and anything else without a Pallas lowering) → ``interpret=True``;
-  * ``REPRO_PALLAS_INTERPRET=0|1`` overrides the auto-selection — useful
-    for debugging a miscompile on device (force interpret) or exercising
-    the compile path in CI emulators (force compile).
+  * ``"pallas"``    — compiled ``pallas_call`` on backends with a Pallas
+    lowering (TPU / GPU);
+  * ``"xla"``       — the compiled lane for backends where ``pallas_call``
+    cannot compile (XLA-CPU raises "Only interpret mode is supported"):
+    the same tile-blocked math lowered through ``jax.jit`` to native XLA
+    codegen (``kernels/xla.py``), where tile sizes become ``lax.map``
+    cache-blocking chunks;
+  * ``"interpret"`` — ``pallas_call(interpret=True)``, the CPU default:
+    validates kernel semantics exactly as written, at interpreter speed.
 
-Kernels take ``interpret: bool | None = None`` and resolve ``None``
-through :func:`resolve_interpret`; nothing else hard-codes the mode.
+``REPRO_INTERPRET=auto|on|off`` selects: ``auto`` interprets on CPU and
+compiles pallas on TPU/GPU; ``on`` forces interpret everywhere; ``off``
+forces the compiled lane (pallas where it compiles, xla on CPU).  The
+legacy ``REPRO_PALLAS_INTERPRET=1|0`` spelling maps to on/off when
+``REPRO_INTERPRET`` is unset.
+
+Pallas kernels still take ``interpret: bool | None = None`` and resolve
+``None`` through :func:`resolve_interpret`; the xla-vs-pallas choice is
+made above them, in ``ops.py``, via :func:`kernel_mode`.
 """
 from __future__ import annotations
 
-import os
-
 import jax
 
-_COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+from .. import env
+
+_PALLAS_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
+def kernel_mode() -> str:
+    """The executable lane for this process: interpret | xla | pallas."""
+    v = env.get("REPRO_INTERPRET")
+    if v == "auto":
+        legacy = env.get("REPRO_PALLAS_INTERPRET")
+        if legacy in ("1", "true"):
+            v = "on"
+        elif legacy in ("0", "false"):
+            v = "off"
+    if v == "on":
+        return "interpret"
+    pallas_compiles = jax.default_backend() in _PALLAS_BACKENDS
+    if v == "off":
+        return "pallas" if pallas_compiles else "xla"
+    return "pallas" if pallas_compiles else "interpret"
+
+
+def backend_key() -> str:
+    """Tuning-table backend key: ``xla-cpu`` | ``tpu`` | ``gpu``."""
+    b = jax.default_backend()
+    if b == "tpu":
+        return "tpu"
+    if b in ("gpu", "cuda", "rocm"):
+        return "gpu"
+    return "xla-cpu"
+
+
+def fused_plan_enabled() -> bool:
+    """Whether the planner should take the fused pdist→rankeval launch.
+
+    Fusion is a compiled-lane optimization: it is on for the ``pallas``
+    and ``xla`` modes and off under interpret, where the staged pipeline
+    is the validated reference (the fused kernel itself is still
+    test-exercised in interpret mode explicitly).
+    """
+    return kernel_mode() != "interpret"
 
 
 def default_interpret() -> bool:
-    """Auto policy: compile on TPU/GPU, interpret elsewhere (CPU)."""
-    env = os.environ.get("REPRO_PALLAS_INTERPRET")
-    if env is not None and env not in ("", "auto"):
-        return env not in ("0", "false", "False")
-    return jax.default_backend() not in _COMPILED_BACKENDS
+    """Auto policy: True iff this process's lane is pallas-interpret."""
+    return kernel_mode() == "interpret"
 
 
 def resolve_interpret(interpret: bool | None) -> bool:
@@ -33,4 +80,5 @@ def resolve_interpret(interpret: bool | None) -> bool:
     return default_interpret() if interpret is None else bool(interpret)
 
 
-__all__ = ["default_interpret", "resolve_interpret"]
+__all__ = ["kernel_mode", "backend_key", "fused_plan_enabled",
+           "default_interpret", "resolve_interpret"]

@@ -1,48 +1,60 @@
-"""Jitted public wrappers around the Pallas kernels.
+"""Jitted public wrappers around the kernel pipeline.
 
-Handle padding to block multiples, platform dispatch and result
-un-padding. These are the entry points the rest of the framework calls;
-nothing else touches pallas_call.
+Handle padding to block multiples, lane dispatch and result un-padding.
+These are the entry points the rest of the framework calls; nothing else
+touches ``pallas_call`` or the XLA lowerings.
 
-Dispatch policy (``repro.kernels.dispatch``): ``pallas_call`` compiles on
-TPU/GPU and runs in interpret mode on CPU, overridable via
-``REPRO_PALLAS_INTERPRET=0|1``. The wrappers resolve the policy per call
-and pass an explicit bool down, so flipping the env var between calls
-takes effect (the kernels' jit caches key on the resolved static value).
+Lane dispatch (``repro.kernels.dispatch.kernel_mode``): each call
+resolves one of three lanes — compiled ``pallas_call`` on TPU/GPU,
+compiled jitted-XLA (``kernels/xla.py``) on CPU under
+``REPRO_INTERPRET=off``, and ``pallas_call(interpret=True)`` otherwise
+(the CPU default).  The wrappers resolve the policy per call and pass
+explicit statics down, so flipping the env var between calls takes
+effect (the kernels' jit caches key on lane-distinct functions and the
+resolved static tile values).
 
-Tiling glue: block sizes shrink to fit small operands — a batch of 3
-queries pads to an 8-row tile, not a 128-row one — which keeps the
-interpret-mode batch engine cheap at small batch sizes while preserving
-the 8×128 f32 tile alignment the TPU path wants.
+Tile selection: explicit ``bq``/``bp``/``bg``/``bb`` arguments are
+always respected (callers pinning shard-local tiles, the autotuner's
+own micro-runs).  ``None`` means policy: interpret mode keeps the
+static heuristics below (small-operand shrink + large point tiles to
+amortize per-grid-cell interpreter cost); the compiled lanes first
+consult the autotuner's tuning table (``kernels/autotune.py``,
+``REPRO_AUTOTUNE``) and fall back to the static compiled heuristics on
+a miss.  Blocks still shrink to fit small operands — a batch of 3
+queries pads to an 8-row tile, not a 128-row one — preserving the
+8×128 f32 tile alignment the TPU lane wants (the xla lane only needs
+the 8-row sublane granularity; its tiles are ``lax.map`` cache-blocking
+chunks).
 
 Shard-local sizing: under ``shard_map`` (the cluster-sharded executor)
 each device traces these wrappers with *shard-local* shapes, so the
-automatic `_tile`/`_point_block` policy already sizes blocks to the
-per-device slice — a 64k-row corpus split 8 ways tiles like an 8k-row
-one.  Callers that pin blocks explicitly (autotuners, benchmarks) should
-derive them from the local operand sizes via :func:`local_blocks`
-instead of global corpus constants.
+automatic policy — tuning-table buckets included — sizes blocks to the
+per-device slice.  Callers that pin blocks explicitly should derive
+them from local operand sizes via :func:`local_blocks` instead of
+global corpus constants.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .dispatch import default_interpret
+from . import autotune
+from .dispatch import fused_plan_enabled, kernel_mode
 from .flash_attention import flash_attention_pallas
+from .fused import pdist_rankeval_pallas
 from .pdist import pdist_pallas
 from .range_filter import range_filter_pallas
 from .rankeval import rankeval_pallas
+from .xla import (pdist_rankeval_xla, pdist_xla, range_filter_xla,
+                  rankeval_xla)
 
 _LANE = 128     # TPU lane width: last-dim tiles stay multiples of this
 _SUBLANE = 8    # f32 sublane width: leading-dim tiles align to this
 
 
 def _interpret() -> bool:
-    return default_interpret()
+    return kernel_mode() == "interpret"
 
 
 def _tile(n: int, block: int, mult: int = _SUBLANE) -> int:
@@ -54,6 +66,12 @@ def _lane_mult(interp: bool) -> int:
     """Lane-dim tile granularity: interpret mode can shrink below the
     128-lane TPU tile; the compiled path keeps full alignment."""
     return _SUBLANE if interp else _LANE
+
+
+def _mode_lane(mode: str) -> int:
+    """Lane-dim granularity per lane: only the pallas-compiled lane
+    needs the 128-lane alignment; interpret and xla chunk at sublane."""
+    return _LANE if mode == "pallas" else _SUBLANE
 
 
 def _point_block(npts: int, bp: int, interp: bool) -> int:
@@ -83,35 +101,65 @@ def _pad_rows(x: jax.Array, mult: int, fill: float = 0.0) -> jax.Array:
     return pad_to(x, mult, axis=0, fill=fill)
 
 
-def local_blocks(nq: int, npts: int, bq: int = 128,
-                 bp: int = 128) -> tuple[int, int]:
+def _qp_tiles(nq: int, npts: int, d: int, metric: str, mode: str,
+              bq: int | None, bp: int | None,
+              kernel: str) -> tuple[int, int]:
+    """Resolve the (bq, bp) pair for a query×points kernel under the
+    current lane: explicit values win, then the tuning table (compiled
+    lanes), then static heuristics."""
+    interp = mode == "interpret"
+    if not interp and (bq is None or bp is None):
+        t = autotune.tiles_for(kernel, metric, {"q": nq, "p": npts, "d": d})
+        if t:
+            bq = t["bq"] if bq is None else bq
+            bp = t["bp"] if bp is None else bp
+    if kernel == "pdist" and metric in ("l1", "linf") and mode != "xla":
+        # the pallas kernels cap bq at 32 for the broadcast metrics —
+        # cap before padding so unaligned query counts pad to the capped
+        # tile, not past it
+        bq = min(128 if bq is None else bq, 32)
+    bq = _tile(nq, 128 if bq is None else bq)
+    if interp:
+        bp = _point_block(npts, 128 if bp is None else bp, interp)
+    else:
+        bp = _tile(npts, 128 if bp is None else bp, _mode_lane(mode))
+    return bq, bp
+
+
+def local_blocks(nq: int, npts: int, bq: int | None = None,
+                 bp: int | None = None, metric: str = "sql2",
+                 d: int = 8) -> tuple[int, int]:
     """Resolve the (bq, bp) tile pair for (possibly shard-local) operand
     sizes under the current dispatch policy: query tiles align to the
     sublane width, point tiles grow to amortize interpret-mode grid cells
-    and cap at the local point count (lane-aligned).
+    (compiled lanes instead consult the autotune table) and cap at the
+    local point count (lane-aligned per backend).
 
     This is exactly what ``pdist``/``range_filter`` resolve internally
     from the shapes they receive — callers inside ``shard_map`` get
     shard-local sizing for free.  The helper exists for code that needs
-    the policy *outside* a kernel call: autotuners seeding a search, and
-    benchmarks reporting the tile a measurement ran with."""
-    interp = _interpret()
-    return _tile(nq, bq), _point_block(npts, bp, interp)
+    the policy *outside* a kernel call: benchmarks reporting the tile a
+    measurement ran with, and tile-alignment property tests.  ``d`` only
+    affects the compiled lanes' tuning-table shape bucket."""
+    return _qp_tiles(nq, npts, d, metric, kernel_mode(), bq, bp, "pdist")
 
 
-def pdist(q, p, metric: str = "sql2", bq: int = 128, bp: int = 128):
+def pdist(q, p, metric: str = "sql2", bq: int | None = None,
+          bp: int | None = None):
     """Pairwise distances with automatic padding. metric: sql2 | l1 | linf.
     sql2 returns squared distances (use ``jnp.sqrt`` or square radii)."""
     q = jnp.asarray(q)
     p = jnp.asarray(p)
     nq, npts = q.shape[0], p.shape[0]
-    interp = _interpret()
-    bq = _tile(nq, bq)
-    bp = _point_block(npts, bp, interp)
+    mode = kernel_mode()
+    bq, bp = _qp_tiles(nq, npts, q.shape[1], metric, mode, bq, bp, "pdist")
     qp = _pad_rows(q, bq)
     pp = _pad_rows(p, bp)
-    out = pdist_pallas(qp, pp, metric=metric, bq=bq, bp=bp,
-                       interpret=interp)
+    if mode == "xla":
+        out = pdist_xla(qp, pp, metric=metric, bq=bq, bp=bp)
+    else:
+        out = pdist_pallas(qp, pp, metric=metric, bq=bq, bp=bp,
+                           interpret=mode == "interpret")
     return out[:nq, :npts]
 
 
@@ -120,42 +168,110 @@ def rankeval(x, coef, lo, hi, n, n_rings: int = 20,
     """Batched rank-model eval (G groups × B values) + ring ids.
 
     ``bg``/``bb`` override the group/value tile sizes (``None`` → policy
-    default, which adapts to the — possibly shard-local — operand)."""
+    default, which adapts to the — possibly shard-local — operand and,
+    on the compiled lanes, consults the tuning table)."""
     x = jnp.asarray(x, jnp.float32)
     coef = jnp.asarray(coef, jnp.float32)
     g, b = x.shape
-    interp = _interpret()
+    mode = kernel_mode()
+    interp = mode == "interpret"
+    if not interp and (bg is None or bb is None):
+        t = autotune.tiles_for("rankeval", None,
+                               {"g": g, "b": b, "c": coef.shape[1]})
+        if t:
+            bg = t["bg"] if bg is None else bg
+            bb = t["bb"] if bb is None else bb
     bg = _tile(g, 64 if interp else 8) if bg is None else _tile(g, bg)
     # an explicit bb is respected (not grown) but keeps the backend's
     # lane granularity so an override can never break tile alignment
-    bb = _point_block(b, 128, interp) if bb is None \
-        else _tile(b, bb, _lane_mult(interp))
+    if interp:
+        bb = _point_block(b, 128, interp) if bb is None \
+            else _tile(b, bb, _lane_mult(interp))
+    else:
+        bb = _tile(b, 128 if bb is None else bb, _mode_lane(mode))
     gp, bp_ = (-g) % bg, (-b) % bb
     xq = jnp.pad(x, ((0, gp), (0, bp_)))
     coefq = jnp.pad(coef, ((0, gp), (0, 0)))
     loq = jnp.pad(jnp.asarray(lo, jnp.float32), (0, gp))
     hiq = jnp.pad(jnp.asarray(hi, jnp.float32), (0, gp), constant_values=1.0)
     nq_ = jnp.pad(jnp.asarray(n, jnp.float32), (0, gp))
-    rank, rid = rankeval_pallas(xq, coefq, loq, hiq, nq_, n_rings=n_rings,
-                                bg=bg, bb=bb, interpret=interp)
+    if mode == "xla":
+        rank, rid = rankeval_xla(xq, coefq, loq, hiq, nq_,
+                                 n_rings=n_rings, bg=bg, bb=bb)
+    else:
+        rank, rid = rankeval_pallas(xq, coefq, loq, hiq, nq_,
+                                    n_rings=n_rings, bg=bg, bb=bb,
+                                    interpret=interp)
     return rank[:g, :b], rid[:g, :b]
 
 
-def range_filter(q, p, r, bq: int = 128, bp: int = 128):
+def range_filter(q, p, r, bq: int | None = None, bp: int | None = None):
     """Fused L2-ball membership mask for batched range queries."""
     q = jnp.asarray(q)
     p = jnp.asarray(p)
     r = jnp.asarray(r, jnp.float32)
     nq, npts = q.shape[0], p.shape[0]
-    interp = _interpret()
-    bq = _tile(nq, bq)
-    bp = _point_block(npts, bp, interp)
+    mode = kernel_mode()
+    bq, bp = _qp_tiles(nq, npts, q.shape[1], "sql2", mode, bq, bp,
+                       "range_filter")
     qp = _pad_rows(q, bq)
     pp = _pad_rows(p, bp, fill=np.inf)     # padding rows never match
     rp = _pad_rows(r, bq, fill=-1.0)
-    mask, cnt = range_filter_pallas(qp, pp, rp, bq=bq, bp=bp,
-                                    interpret=interp)
+    if mode == "xla":
+        mask, cnt = range_filter_xla(qp, pp, rp, bq=bq, bp=bp)
+    else:
+        mask, cnt = range_filter_pallas(qp, pp, rp, bq=bq, bp=bp,
+                                        interpret=mode == "interpret")
     return mask[:nq, :npts], cnt[:nq]
+
+
+def pdist_rankeval(q, piv, coef, lo, hi, n, rg, n_rings: int = 20,
+                   bg: int | None = None, bb: int | None = None):
+    """Fused plan stage: query→pivot L2 distances + rank eval at the
+    widened-radius boundaries dq∓rg, one launch, no staged (G, 2B)
+    distance buffer.
+
+    ``q`` (B, d); ``piv`` (G, d); ``coef`` (G, C); ``lo``/``hi``/``n``
+    (G,); ``rg`` (B,).  Returns ``(dq (B, G) f32, rank_lo (G, B) i32,
+    rank_hi (G, B) i32)`` — bit-identical (within a lane) to the staged
+    ``sqrt(max(pdist, 0))`` + ``rankeval(concat(dq-rg, dq+rg))``
+    pipeline; the planner selects between them via
+    ``dispatch.fused_plan_enabled``.
+    """
+    q = jnp.asarray(q, jnp.float32)
+    piv = jnp.asarray(piv, jnp.float32)
+    coef = jnp.asarray(coef, jnp.float32)
+    B, d = q.shape
+    G, C = coef.shape
+    mode = kernel_mode()
+    interp = mode == "interpret"
+    if not interp and (bg is None or bb is None):
+        t = autotune.tiles_for("pdist_rankeval", None,
+                               {"g": G, "b": B, "d": d, "c": C})
+        if t:
+            bg = t["bg"] if bg is None else bg
+            bb = t["bb"] if bb is None else bb
+    bg = _tile(G, 64 if interp else 8) if bg is None else _tile(G, bg)
+    bb = _tile(B, 128 if bb is None else bb, _mode_lane(mode))
+    gp = (-G) % bg
+    qp = _pad_rows(q, bb)
+    rgp = _pad_rows(jnp.asarray(rg, jnp.float32), bb)
+    pivp = _pad_rows(piv, bg)
+    coefp = jnp.pad(coef, ((0, gp), (0, 0)))
+    lop = jnp.pad(jnp.asarray(lo, jnp.float32), (0, gp))
+    hip = jnp.pad(jnp.asarray(hi, jnp.float32), (0, gp),
+                  constant_values=1.0)
+    np_ = jnp.pad(jnp.asarray(n, jnp.float32), (0, gp))
+    if mode == "xla":
+        dq, rlo, rhi = pdist_rankeval_xla(qp, pivp, coefp, lop, hip, np_,
+                                          rgp, n_rings=n_rings, bg=bg,
+                                          bb=bb)
+    else:
+        dq, rlo, rhi = pdist_rankeval_pallas(qp, pivp, coefp, lop, hip,
+                                             np_, rgp, n_rings=n_rings,
+                                             bg=bg, bb=bb,
+                                             interpret=interp)
+    return dq[:B, :G], rlo[:G, :B], rhi[:G, :B]
 
 
 def flash_attention(q, k, v, causal: bool = True, bq: int = 128,
@@ -169,11 +285,15 @@ def flash_attention(q, k, v, causal: bool = True, bq: int = 128,
     if pk:
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    # flash attention has no jitted-XLA lane: it compiles only where
+    # pallas_call does (TPU/GPU); everywhere else it stays in interpret
+    # mode even under REPRO_INTERPRET=off
     out = flash_attention_pallas(q, k, v, causal=causal, bq=bq, bk=bk,
-                                 interpret=_interpret(),
+                                 interpret=kernel_mode() != "pallas",
                                  kv_len=sk if pk else None)
     return out[:, :, :sq]
 
 
-__all__ = ["pdist", "rankeval", "range_filter", "flash_attention",
-           "pad_to", "local_blocks"]
+__all__ = ["pdist", "rankeval", "range_filter", "pdist_rankeval",
+           "flash_attention", "pad_to", "local_blocks",
+           "fused_plan_enabled"]

@@ -8,6 +8,12 @@ rid = clip(rank // ceil(n/N), 0, N-1) — one VMEM pass, VPU only.
 Layout: x (G, B) distances; coef (G, C) low→high Chebyshev coefficients
 (zero-padded to a common C); lo/hi/n (G,) per-group normalization; a
 single pass produces both clipped ranks and ring IDs.
+
+:func:`rank_math` holds the arithmetic itself so the compiled-XLA lane
+(``xla.py``) and the fused pdist→rankeval kernel (``fused.py``) execute
+the exact same f32 operation sequence as this kernel — bit-identity
+across call sites depends on sharing it, not on reimplementing the
+recurrence (``ref.py`` intentionally uses a different one).
 """
 from __future__ import annotations
 
@@ -20,12 +26,17 @@ from jax.experimental import pallas as pl
 from .dispatch import resolve_interpret
 
 
-def _rankeval_kernel(x_ref, coef_ref, lo_ref, hi_ref, n_ref, o_rank_ref,
-                     o_rid_ref, *, n_coef: int, n_rings: int):
-    x = x_ref[...].astype(jnp.float32)                  # (g, b)
-    lo = lo_ref[...].astype(jnp.float32)[:, None]       # (g, 1)
-    hi = hi_ref[...].astype(jnp.float32)[:, None]
-    n = n_ref[...].astype(jnp.float32)[:, None]
+def rank_math(x, coef, lo, hi, n, *, n_coef: int, n_rings: int):
+    """Clenshaw rank eval + ring id on a (g, b) tile; returns int32 pair.
+
+    ``x`` (g, b) f32 distances; ``coef`` (g, C); ``lo``/``hi``/``n``
+    (g,).  Pure jnp — callable from a pallas kernel body (on
+    materialized refs) and from jitted XLA code alike.
+    """
+    x = x.astype(jnp.float32)
+    lo = lo.astype(jnp.float32)[:, None]                # (g, 1)
+    hi = hi.astype(jnp.float32)[:, None]
+    n = n.astype(jnp.float32)[:, None]
     t = (x - lo) / jnp.maximum(hi - lo, 1e-30) * 2.0 - 1.0
     t = jnp.clip(t, -1.0, 1.0)
     # Clenshaw recurrence, coefficients high -> low (static unroll over C)
@@ -33,16 +44,24 @@ def _rankeval_kernel(x_ref, coef_ref, lo_ref, hi_ref, n_ref, o_rank_ref,
     b2 = jnp.zeros_like(t)
     t2 = 2.0 * t
     for k in range(n_coef - 1, 0, -1):
-        c_k = coef_ref[:, k].astype(jnp.float32)[:, None]
+        c_k = coef[:, k].astype(jnp.float32)[:, None]
         b1, b2 = c_k + t2 * b1 - b2, b1
-    c0 = coef_ref[:, 0].astype(jnp.float32)[:, None]
+    c0 = coef[:, 0].astype(jnp.float32)[:, None]
     r = c0 + t * b1 - b2
     rank = jnp.clip(jnp.rint(r), 0.0, jnp.maximum(n - 1.0, 0.0))
     width = jnp.ceil(n / float(n_rings))
     rid = jnp.clip(jnp.floor(rank / jnp.maximum(width, 1.0)), 0.0,
                    float(n_rings - 1))
-    o_rank_ref[...] = rank.astype(jnp.int32)
-    o_rid_ref[...] = rid.astype(jnp.int32)
+    return rank.astype(jnp.int32), rid.astype(jnp.int32)
+
+
+def _rankeval_kernel(x_ref, coef_ref, lo_ref, hi_ref, n_ref, o_rank_ref,
+                     o_rid_ref, *, n_coef: int, n_rings: int):
+    rank, rid = rank_math(x_ref[...], coef_ref[...], lo_ref[...],
+                          hi_ref[...], n_ref[...], n_coef=n_coef,
+                          n_rings=n_rings)
+    o_rank_ref[...] = rank
+    o_rid_ref[...] = rid
 
 
 @functools.partial(

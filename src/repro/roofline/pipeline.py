@@ -1,0 +1,212 @@
+"""Roofline analysis of the real query pipeline: pdist→rankeval→range_filter.
+
+Turns the dormant HLO cost machinery into a measured claim about the
+serving hot path.  For each kernel stage, at the shapes the resident
+executor actually launches against a real snapshot:
+
+1. jit the stage and lower it to *optimized* HLO
+   (``jit(...).lower(args).compile().as_text()``);
+2. run :func:`repro.roofline.hlo_cost.analyze_hlo` over the text with
+   ``structural_only=False`` — rankeval is a dot-free VPU kernel, the
+   structural filter would report it as ~0 FLOPs;
+3. time the compiled stage (best-of, ``block_until_ready``);
+4. divide by the calibrated machine ceiling
+   (:func:`repro.roofline.hw.machine_profile`): arithmetic intensity
+   I = FLOPs/bytes, attainable = min(peak_flops, I · mem_bw),
+   utilization = achieved FLOP/s ÷ attainable, bottleneck =
+   compute vs memory by which roof binds.
+
+The report runs the *compiled* lane (``REPRO_INTERPRET=off`` is forced
+for its duration — interpret timings would say nothing about hardware,
+and on CPU the xla lane also yields analyzable HLO where a pallas
+custom-call would be opaque).  Entry point:
+``python -m repro.roofline.report --pipeline``; ``bench_kernels.py``
+embeds the same dict in ``BENCH_kernels.json``.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from . import hw
+from .hlo_cost import analyze_hlo
+
+
+def _best_of(fn, reps: int) -> float:
+    import jax
+    jax.block_until_ready(fn())            # compile + warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _io_bytes(fn, args) -> float:
+    """Algorithmic stage traffic: operand bytes in + result bytes out —
+    the roofline denominator.  The per-op HLO byte sum double-counts
+    every fused producer-consumer edge, so it is reported separately as
+    an upper bound, not used for intensity."""
+    import jax
+    out = jax.eval_shape(fn, *args)
+    leaves = jax.tree_util.tree_leaves(out)
+    return (sum(float(np.prod(a.shape)) * a.dtype.itemsize for a in args)
+            + sum(float(np.prod(l.shape)) * l.dtype.itemsize
+                  for l in leaves))
+
+
+def _stage_report(name: str, fn, args, machine: dict, reps: int) -> dict:
+    import jax
+    jfn = jax.jit(fn)
+    txt = jfn.lower(*args).compile().as_text()
+    cost = analyze_hlo(txt, structural_only=False)
+    t = _best_of(lambda: jfn(*args), reps)
+    flops = float(cost.flops)
+    io = _io_bytes(fn, args)
+    intensity = flops / io if io else float("inf")
+    attainable = min(machine["peak_flops"], intensity * machine["mem_bw"])
+    achieved = flops / t if t else 0.0
+    util = achieved / attainable if attainable else 0.0
+    if intensity * machine["mem_bw"] >= machine["peak_flops"]:
+        bound = "compute"
+    elif util > 1.0:
+        # beating the DRAM roof: the working set is cache-resident, so
+        # the memory ceiling doesn't apply at this shape
+        bound = "cache"
+    else:
+        bound = "memory"
+    return {
+        "stage": name,
+        "flops": flops,
+        "io_bytes": io,
+        "hlo_bytes": float(cost.bytes),
+        "intensity_flops_per_byte": round(intensity, 3),
+        "time_us": round(t * 1e6, 1),
+        "achieved_gflops": round(achieved / 1e9, 2),
+        "attainable_gflops": round(attainable / 1e9, 2),
+        "roofline_utilization": round(util, 4),
+        "bound": bound,
+    }
+
+
+def pipeline_report(n: int = 12_000, d: int = 8, batch: int = 64,
+                    quick: bool = False, reps: int = 5) -> dict:
+    """Per-stage roofline report over a real snapshot's query pipeline."""
+    if quick:
+        n, reps = min(n, 4_000), min(reps, 2)
+    prev = os.environ.get("REPRO_INTERPRET")
+    os.environ["REPRO_INTERPRET"] = "off"
+    try:
+        return _pipeline_report(n, d, batch, reps)
+    finally:
+        if prev is None:
+            del os.environ["REPRO_INTERPRET"]
+        else:
+            os.environ["REPRO_INTERPRET"] = prev
+
+
+def _pipeline_report(n: int, d: int, batch: int, reps: int) -> dict:
+    import jax.numpy as jnp
+
+    from ..core import LIMSIndex, MetricSpace
+    from ..core.metrics import dist_one_to_many
+    from ..core.planner import _R_ABS, _R_REL
+    from ..core.snapshot import LIMSSnapshot
+    from ..data.datasets import gauss_mix
+    from ..kernels import ops
+    from ..kernels.dispatch import kernel_mode
+
+    X = gauss_mix(n, d, seed=0)
+    ix = LIMSIndex(MetricSpace(X, "l2"), n_clusters=16, m=3, n_rings=20)
+    snap = LIMSSnapshot.build(ix)
+    rng = np.random.default_rng(1)
+    qf = jnp.asarray(X[rng.choice(n, batch)]
+                     + rng.normal(0, 0.003, (batch, d)), jnp.float32)
+    rf = jnp.asarray([float(np.quantile(dist_one_to_many(np.asarray(q), X,
+                                                         "l2"), 1e-3))
+                      for q in np.asarray(qf)], jnp.float32)
+    r_g = rf * (1.0 + _R_REL) + _R_ABS
+
+    G = snap.K * snap.m
+    pivots = snap.pivots.reshape(G, d)
+    rows = snap.rows.reshape(snap.n_slots, d)
+    coef = snap.coef.reshape(G, -1)
+    mlo = snap.model_lo.reshape(-1)
+    mhi = snap.model_hi.reshape(-1)
+    mn = snap.model_n.reshape(-1)
+
+    machine = hw.machine_profile()
+
+    # the boundary matrix the staged plan feeds rankeval (G, 2B)
+    dq = jnp.sqrt(jnp.maximum(ops.pdist(qf, pivots), 0.0))
+    xb = jnp.concatenate([(dq - r_g[:, None]).T,
+                          (dq + r_g[:, None]).T], axis=1)
+
+    stages = [
+        # refinement-shaped pdist: the batch against every resident slot
+        ("pdist", lambda q, p: ops.pdist(q, p), (qf, rows)),
+        ("rankeval",
+         lambda x, c, lo, hi, nn: ops.rankeval(x, c, lo, hi, nn,
+                                               n_rings=snap.n_rings),
+         (xb, coef, mlo, mhi, mn)),
+        ("range_filter", lambda q, p, r: ops.range_filter(q, p, r),
+         (qf, rows, rf)),
+        # the fused plan stage (pdist+rankeval in one launch), for the
+        # fusion-win line in the bench
+        ("fused_plan",
+         lambda q, pv, c, lo, hi, nn, rg: ops.pdist_rankeval(
+             q, pv, c, lo, hi, nn, rg, n_rings=snap.n_rings),
+         (qf, pivots, coef, mlo, mhi, mn, r_g)),
+    ]
+    out = {
+        "machine": {k: (round(v, 3) if isinstance(v, float) else v)
+                    for k, v in machine.items()},
+        "kernel_mode": kernel_mode(),
+        "shapes": {"n": n, "d": d, "batch": batch, "G": G,
+                   "n_slots": snap.n_slots},
+        "stages": [_stage_report(nm, fn, args, machine, reps)
+                   for nm, fn, args in stages],
+    }
+    core = [s for s in out["stages"] if s["stage"] != "fused_plan"]
+    tot_t = sum(s["time_us"] for s in core)
+    out["pipeline"] = {
+        "time_us": round(tot_t, 1),
+        "flops": sum(s["flops"] for s in core),
+        "io_bytes": sum(s["io_bytes"] for s in core),
+        "utilization_weighted": round(
+            sum(s["roofline_utilization"] * s["time_us"]
+                for s in core) / tot_t, 4) if tot_t else 0.0,
+    }
+    return out
+
+
+def render(report: dict) -> str:
+    lines = [
+        f"machine: {report['machine']['name']}  "
+        f"peak {report['machine']['peak_flops'] / 1e9:.0f} GFLOP/s  "
+        f"bw {report['machine']['mem_bw'] / 1e9:.1f} GB/s  "
+        f"lane={report['kernel_mode']}",
+        f"shapes: {report['shapes']}",
+        "| stage | FLOPs | IO bytes | I (F/B) | t_us | achieved GF/s | "
+        "attainable GF/s | util | bound |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for s in report["stages"]:
+        lines.append(
+            f"| {s['stage']} | {s['flops']:.3g} | {s['io_bytes']:.3g} | "
+            f"{s['intensity_flops_per_byte']} | {s['time_us']} | "
+            f"{s['achieved_gflops']} | {s['attainable_gflops']} | "
+            f"{s['roofline_utilization'] * 100:.1f}% | {s['bound']} |")
+    p = report["pipeline"]
+    lines.append(
+        f"pipeline (staged 3 kernels): {p['time_us']}us, "
+        f"{p['flops']:.3g} FLOPs, {p['io_bytes']:.3g} IO bytes, "
+        f"time-weighted utilization "
+        f"{p['utilization_weighted'] * 100:.1f}%")
+    return "\n".join(lines)
+
+
+__all__ = ["pipeline_report", "render"]

@@ -21,7 +21,7 @@ tier — CI runs the whole suite that way on a dedicated leg.
 """
 from __future__ import annotations
 
-import os
+from .. import env
 
 from .cache import (DEFAULT_CACHE_PAGES, CacheStats, LRUPageCache,
                     cache_pin_mode)
@@ -34,8 +34,9 @@ from .store import PagedStore, StoreView, load_meta, spill_rows
 
 
 def storage_mode() -> str:
-    """The process-wide storage default: '' (resident) or 'paged'."""
-    return os.environ.get("REPRO_STORAGE", "").strip().lower()
+    """The process-wide storage default: '' (resident) or 'paged'
+    (``REPRO_STORAGE``, validated by ``repro.env``)."""
+    return env.get("REPRO_STORAGE")
 
 
 __all__ = [

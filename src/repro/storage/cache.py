@@ -35,20 +35,21 @@ blind-LRU baseline).
 """
 from __future__ import annotations
 
-import os
 from collections import OrderedDict
 from dataclasses import dataclass, field
 
 import numpy as np
+
+from .. import env
 
 DEFAULT_CACHE_PAGES = 4096
 
 
 def cache_pin_mode() -> bool:
     """Whether planned batches pin their scheduled pages (default on).
-    ``REPRO_CACHE_PIN=off`` reverts to blind LRU — the bench baseline."""
-    return os.environ.get("REPRO_CACHE_PIN", "on").lower() \
-        not in ("off", "0", "no")
+    ``REPRO_CACHE_PIN=off`` reverts to blind LRU — the bench baseline
+    (validated by ``repro.env``)."""
+    return env.get("REPRO_CACHE_PIN") not in ("off", "0", "no")
 
 
 @dataclass

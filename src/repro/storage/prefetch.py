@@ -40,17 +40,19 @@ or test that cares can see exactly what the close threw away.
 from __future__ import annotations
 
 import atexit
-import os
 import queue
 import threading
 from dataclasses import dataclass, field
 
 import numpy as np
 
+from .. import env
+
 
 def prefetch_mode() -> str:
-    """Process-wide prefetch policy: '' (synchronous) or 'async'."""
-    return os.environ.get("REPRO_PREFETCH", "").strip().lower()
+    """Process-wide prefetch policy: ''/off (synchronous) or 'async'
+    (``REPRO_PREFETCH``, validated by ``repro.env``)."""
+    return env.get("REPRO_PREFETCH")
 
 
 @dataclass

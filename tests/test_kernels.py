@@ -17,12 +17,26 @@ def _rand(shape, dtype, seed=0):
     return x.astype(dtype)
 
 
+# Lanes: "on" = pallas interpret (the default CPU validation lane),
+# "off" = the compiled lane (jitted-XLA on CPU, pallas_call on TPU/GPU).
+# Running the oracle comparisons under both pins the compiled hot path
+# against the references directly, not just against the interpret lane.
+LANES = ["on", "off"]
+
+
+@pytest.fixture(params=LANES)
+def lane(request, monkeypatch):
+    monkeypatch.setenv("REPRO_INTERPRET", request.param)
+    monkeypatch.setenv("REPRO_AUTOTUNE", "off")
+    return request.param
+
+
 # ---------------------------------------------------------------- pdist
 @pytest.mark.parametrize("metric", ["sql2", "l1", "linf"])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("nq,npts,d", [(64, 128, 8), (137, 301, 33),
                                        (1, 257, 128), (128, 128, 4)])
-def test_pdist_matches_ref(metric, dtype, nq, npts, d):
+def test_pdist_matches_ref(lane, metric, dtype, nq, npts, d):
     q = _rand((nq, d), dtype, 1)
     p = _rand((npts, d), dtype, 2)
     out = ops.pdist(q, p, metric)
@@ -48,7 +62,7 @@ def test_pdist_property(nq, npts, d, metric):
 # -------------------------------------------------------------- rankeval
 @pytest.mark.parametrize("g,b,c", [(8, 128, 5), (13, 200, 9), (1, 1, 21),
                                    (32, 512, 2)])
-def test_rankeval_matches_ref(g, b, c):
+def test_rankeval_matches_ref(lane, g, b, c):
     coef = _rand((g, c), jnp.float32, 3) * 10
     x = jax.random.uniform(KEY, (g, b), minval=0.0, maxval=2.0)
     lo = jnp.zeros(g)
@@ -96,7 +110,7 @@ def test_rankeval_matches_host_model():
 
 # ----------------------------------------------------------- range_filter
 @pytest.mark.parametrize("nq,npts,d", [(64, 256, 16), (137, 301, 33)])
-def test_range_filter_matches_ref(nq, npts, d):
+def test_range_filter_matches_ref(lane, nq, npts, d):
     q = _rand((nq, d), jnp.float32, 5)
     p = _rand((npts, d), jnp.float32, 6)
     r = jax.random.uniform(KEY, (nq,), minval=1.0, maxval=8.0)
