@@ -58,7 +58,11 @@ SERVING_DEVICES = (1, 4)     # simulated-host-device counts to compare
 # headline cost metric, recorded alongside q/s), and the paged tier
 # with async prefetch (kNN rounds' page IO overlapped with refinement)
 SERVING_CONFIGS = tuple(
-    [(str(nd), nd, {}) for nd in SERVING_DEVICES]
+    # the single-device config additionally runs the open-loop Poisson
+    # latency-under-load sweep (bench_load; BENCH_LOAD is a bench-driver
+    # flag, not a REPRO_* knob)
+    [(str(nd), nd, ({"BENCH_LOAD": "1"} if nd == 1 else {}))
+     for nd in SERVING_DEVICES]
     + [("paged", 1, {"REPRO_STORAGE": "paged"}),
        ("paged-prefetch", 1, {"REPRO_STORAGE": "paged",
                               "REPRO_PREFETCH": "async"}),
@@ -67,7 +71,12 @@ SERVING_CONFIGS = tuple(
        # CPU-only host, held to the same golden no-regression bar (the
        # goldens run in the same lane inside the worker, so the bar
        # compares plan/execute vs the PR-4 drivers at compiled speed)
-       ("xla-compiled", 1, {"REPRO_INTERPRET": "off"})])
+       ("xla-compiled", 1, {"REPRO_INTERPRET": "off"}),
+       # full observability (metrics + spans + Chrome trace ring) under
+       # the same golden no-regression bar as every other config — the
+       # obs-overhead acceptance gate.  The other configs run at the
+       # REPRO_OBS default ("on"), so the bar also covers metrics-on.
+       ("obs-trace", 1, {"REPRO_OBS": "trace"})])
 
 
 def _bench(fn, reps: int) -> float:
@@ -295,6 +304,12 @@ def serving_worker() -> dict:
     # records achieved batch sizes, queue waits, per-replica balance,
     # and a deliberate overload burst for the shed rate
     rec["frontend"] = _bench_frontend(se, Q)
+    if os.environ.get("BENCH_LOAD") == "1":
+        # open-loop Poisson latency-under-load sweep (ROADMAP item 2):
+        # latency percentiles vs offered load, knee where the frontend
+        # stops keeping up (p99 blowout or admission-control shed)
+        from .bench_load import bench_latency_under_load
+        rec["latency_under_load"] = bench_latency_under_load(se, Q)
     if se.store is not None:
         # the paper's IO metric: page accesses (and candidates) per
         # query, from the store's cache stats over one clean batch each.
@@ -401,6 +416,18 @@ def serving_worker() -> dict:
             "hit_rate_pinned": _hit_rate(True),
             "hit_rate_blind_lru": _hit_rate(False),
         }
+
+    # what the obs layer saw over the whole worker run: scalar metrics
+    # (counters + gauges; histograms stay out of the committed JSON),
+    # the profile ring depth, and the trace ring depth under trace mode
+    from repro import obs
+    scalars = {k: v for k, v in obs.REGISTRY.snapshot().items()
+               if not isinstance(v, dict)}
+    rec["obs"] = {"mode": obs.obs_mode(),
+                  "metrics": len(obs.REGISTRY),
+                  "profiles": len(obs.profiles()),
+                  "trace_events": obs.trace_len(),
+                  "counters": scalars}
     return rec
 
 
@@ -424,6 +451,8 @@ def bench_serving_scaling(configs=SERVING_CONFIGS,
         env["REPRO_STORAGE"] = ""
         env["REPRO_PREFETCH"] = ""
         env["REPRO_INTERPRET"] = ""
+        env["REPRO_OBS"] = ""           # blank -> the default ("on")
+        env.pop("BENCH_LOAD", None)
         env.update(extra_env)
         if real_io:
             env["REPRO_REAL_IO"] = "1"

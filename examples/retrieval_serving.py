@@ -19,6 +19,7 @@ framework trains.
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python examples/retrieval_serving.py
 """
+import os
 import tempfile
 import time
 
@@ -227,6 +228,33 @@ def main() -> None:
           f"p99 {m['queue_wait_ms_p99']:.1f} ms, shed rate "
           f"{m['shed_rate']:.0%}) over {len(repl)} replica(s); "
           f"all results exact. OK")
+
+    # 9) observability (DESIGN.md §11): everything above was also being
+    # measured.  Under REPRO_OBS=trace every span on the query path —
+    # frontend coalescing, plan construction, kernel execution, page
+    # fetches — lands in a Chrome trace_event ring, every served batch
+    # yields a structured QueryProfile (the paper's per-query costs:
+    # pages, candidates, pruning power, rounds, per-stage latency), and
+    # the registry holds the long-run counters and latency histograms.
+    from repro import obs
+    obs.configure("trace")
+    cold.knn_query_batch(fresh, 1)          # one traced batch
+    prof = cold.executor.last_profile
+    assert prof is not None and prof.missing() == [], \
+        f"served batch must yield a complete QueryProfile: {prof}"
+    trace_path = os.path.join(spill_dir, "serving.trace.json")
+    n_events = obs.write_chrome_trace(trace_path)
+    assert n_events > 0, "trace mode must record query-path spans"
+    d = prof.as_dict()
+    print(f"observability: {d['kind']} batch of {d['batch']} on "
+          f"{d['backend']}/{d['storage']} → profile: "
+          f"{d['pages_per_query']:.1f} pages/query, "
+          f"{d['candidates_per_query']:.0f} candidates/query, "
+          f"{d['clusters_per_query']:.1f}/{d['n_clusters']} clusters, "
+          f"{d['rounds']} round(s), stages "
+          f"{ {k: round(v, 2) for k, v in d['stages_ms'].items()} } ms; "
+          f"{n_events} trace events -> {trace_path} "
+          f"(load in Perfetto). OK")
 
 
 if __name__ == "__main__":

@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import functools
 import threading
+import time
 from types import SimpleNamespace
 
 import numpy as np
@@ -57,6 +58,9 @@ from jax.experimental.shard_map import shard_map
 
 from .. import env
 from ..kernels import ops
+from ..obs import registry as _obs
+from ..obs.profile import QueryProfile, record_profile
+from ..obs.trace import span
 from ..sharding.logical import default_rules, serving_mesh, spec_for
 from ..storage import (PagePrefetcher, cache_pin_mode, plan_batch,
                        prefetch_mode)
@@ -507,6 +511,9 @@ class QueryExecutor:
         # batch (last-writer-wins under concurrent batches, like last_io)
         self.last_knn: dict | None = None
         self.last_driver: str | None = None
+        # QueryProfile of the most recent batch (None until one runs,
+        # or with REPRO_OBS=off; last-writer-wins like last_io/last_knn)
+        self.last_profile = None
         # per-thread sync counter: executors serve lock-free concurrent
         # query threads, and one batch's count must not absorb another's
         self._tls = threading.local()
@@ -569,6 +576,47 @@ class QueryExecutor:
             *(getattr(self.snap, f) for f in _DEVICE_FIELDS),
             n_rings=self.snap.n_rings, k_eff=k_eff, max_rounds=max_rounds)
 
+    # -------------------------------------------------------- observability
+    def _emit_profile(self, plan: CandidatePlan, final: np.ndarray,
+                      rounds: int, stages: dict, t0: float) -> None:
+        """Build and record one batch's :class:`QueryProfile`.
+
+        Everything derives from state already on the host — the final
+        candidate mask the backend returned, ``last_io``, the
+        thread-local sync counter — so profiling adds *zero* device
+        syncs (the planner's O(1)-syncs-per-batch contract is pinned by
+        tests and must survive instrumentation).  Candidates here are
+        the certified rows refinement actually scanned; clusters are
+        how many of the K clusters those rows span (TriPrune's pruning
+        power, per query)."""
+        if not _obs.enabled():
+            return
+        s = self.snap
+        B = plan.B
+        K, n_max, _ = s.rids.shape
+        cand = final.sum(axis=1)
+        clusters = final.reshape(B, K, n_max).any(axis=-1).sum(axis=-1)
+        if self.backend.name == "paged" and self.last_io is not None:
+            pages = int(self.last_io["pages"])
+            ppq = float(np.mean(self.last_io["pages_per_query"]))
+        else:
+            pages, ppq = 0, 0.0
+        prof = QueryProfile(
+            kind=plan.kind, batch=B, k=plan.k,
+            backend=self.backend.name,
+            driver=self.last_driver if plan.kind == "knn" else None,
+            storage="paged" if s.store is not None else "resident",
+            n_shards=int(getattr(self, "n_shards", 1)),
+            rounds=int(rounds),
+            host_syncs=int(getattr(self._tls, "syncs", 0)),
+            pages=pages, pages_per_query=ppq,
+            candidates_per_query=float(cand.mean()),
+            clusters_per_query=float(clusters.mean()),
+            n_clusters=int(K), stages=stages,
+            total_s=time.perf_counter() - t0 + plan.plan_s)
+        self.last_profile = prof
+        record_profile(prof)
+
     # ----------------------------------------------------- refinement data
     def _refine_rows(self, idx: np.ndarray) -> np.ndarray:
         """f64 rows for flat slot ids: resident matrix or page gather
@@ -588,6 +636,7 @@ class QueryExecutor:
         Q = np.atleast_2d(np.asarray(Q, np.float64))
         B = Q.shape[0]
         r_arr = np.broadcast_to(np.asarray(r, np.float64), (B,))
+        self._tls.syncs = 0
         plan = self.planner.plan_range(Q, r_arr)
         return self.execute_range(Q, plan)
 
@@ -599,16 +648,27 @@ class QueryExecutor:
         their f32 device copy; exact refinement needs f64)."""
         s = self.snap
         Q = np.atleast_2d(np.asarray(Q, np.float64))
+        if plan._planner is not self.planner:
+            self._tls.syncs = 0
+        t0 = time.perf_counter()
+        stages = {"plan": plan.plan_s}
         try:
-            hit = self.backend.range_hits(plan)
+            with span("executor.range_execute",
+                      {"B": plan.B, "backend": self.backend.name}):
+                hit = self.backend.range_hits(plan)
+            t1 = time.perf_counter()
+            stages["execute"] = t1 - t0
             out = []
-            for b in range(Q.shape[0]):
-                idx = np.nonzero(hit[b])[0]
-                ids = s.gids_np[idx]
-                d_true = dist_one_to_many(Q[b], self._refine_rows(idx),
-                                          "l2")
-                keep = d_true <= plan.radii[b]
-                out.append((ids[keep], d_true[keep]))
+            with span("executor.refine", {"B": plan.B}):
+                for b in range(Q.shape[0]):
+                    idx = np.nonzero(hit[b])[0]
+                    ids = s.gids_np[idx]
+                    d_true = dist_one_to_many(Q[b], self._refine_rows(idx),
+                                              "l2")
+                    keep = d_true <= plan.radii[b]
+                    out.append((ids[keep], d_true[keep]))
+            stages["refine"] = time.perf_counter() - t1
+            self._emit_profile(plan, hit, 1, stages, t0)
         finally:
             self.backend.release(plan)
         return out
@@ -642,13 +702,24 @@ class QueryExecutor:
         Q = np.atleast_2d(np.asarray(Q, np.float64))
         if plan._planner is not self.planner:
             self._tls.syncs = 0
+        t0 = time.perf_counter()
+        stages = {"plan": plan.plan_s}
         try:
-            final, rounds = self.backend.knn_candidates(plan)
+            with span("executor.knn_execute",
+                      {"B": plan.B, "k": plan.k,
+                       "backend": self.backend.name}):
+                final, rounds = self.backend.knn_candidates(plan)
+            t1 = time.perf_counter()
+            stages["execute"] = t1 - t0
             self.last_knn = {"backend": self.backend.name, "k": plan.k,
                              "rounds": rounds,
                              "host_syncs": self._tls.syncs,
                              "driver": self.last_driver}
-            return self._refine_topk(Q, final, plan.k)
+            with span("executor.refine", {"B": plan.B}):
+                out = self._refine_topk(Q, final, plan.k)
+            stages["refine"] = time.perf_counter() - t1
+            self._emit_profile(plan, final, rounds, stages, t0)
+            return out
         finally:
             self.backend.release(plan)
 

@@ -40,6 +40,7 @@ bands.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -48,6 +49,8 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels import ops
+from ..obs import registry as _obs
+from ..obs.trace import span
 
 # f32 guard bands: rank math and distances run in f64 on the host; the
 # device path inflates radii so rounding can never exclude a true result
@@ -152,6 +155,11 @@ class CandidatePlan:
     # drained by the executor's release (finally) — never shared across
     # plans, so a router subset starts with its own empty ledger
     _pins: list = field(repr=False, default_factory=list)
+    # wall seconds the planner spent constructing this plan — travels
+    # with the plan so whichever executor runs it can charge the plan
+    # stage in its QueryProfile (a router subset inherits it: the
+    # replica executes a slice of the same single construction)
+    plan_s: float = 0.0
 
     @property
     def qf(self) -> jax.Array:
@@ -223,7 +231,8 @@ class CandidatePlan:
             _qf=qf,
             _mask_np=None if self._mask_np is None else self._mask_np[idx],
             _routing_np=None if self._routing_np is None
-            else self._routing_np[idx])
+            else self._routing_np[idx],
+            plan_s=self.plan_s)
 
 
 class Planner:
@@ -243,10 +252,15 @@ class Planner:
     def plan_range(self, Q64: np.ndarray, r64: np.ndarray) -> CandidatePlan:
         """Single-round plan at the queries' own radii."""
         self.built += 1
-        return CandidatePlan(
-            kind="range", B=Q64.shape[0], k=None, max_rounds=1,
-            growth=1.0, radii=np.array(r64, np.float64),
-            _planner=self, _qf=jnp.asarray(Q64, jnp.float32))
+        t0 = time.perf_counter()
+        with span("planner.plan_range", {"B": int(Q64.shape[0])}):
+            plan = CandidatePlan(
+                kind="range", B=Q64.shape[0], k=None, max_rounds=1,
+                growth=1.0, radii=np.array(r64, np.float64),
+                _planner=self, _qf=jnp.asarray(Q64, jnp.float32))
+        plan.plan_s = time.perf_counter() - t0
+        _obs.count("planner.plans_built")
+        return plan
 
     def plan_knn(self, Q64: np.ndarray, k_eff: int,
                  max_rounds: int) -> CandidatePlan:
@@ -261,20 +275,26 @@ class Planner:
         collapse the seed below any real point's distance.
         """
         self.built += 1
-        s = self.ex.snap
-        qf = jnp.asarray(Q64, jnp.float32)
-        K, n_max, m = s.rids.shape
-        dq = np.asarray(jnp.sqrt(jnp.maximum(
-            ops.pdist(qf, s.pivots.reshape(K * m, s.d)), 0.0)))
-        self.ex._count_sync()
-        live_k = s.valid_np.reshape(K, n_max).any(axis=1)       # (K,)
-        dqm = np.where(np.repeat(live_k, m)[None], dq, np.inf)
-        r0 = dqm.min(axis=1).astype(np.float64) * (1.0 + _SEED_REL) \
-            + _BALL_ABS
-        return CandidatePlan(
-            kind="knn", B=Q64.shape[0], k=int(k_eff),
-            max_rounds=int(max_rounds), growth=2.0, radii=r0,
-            _planner=self, _qf=qf)
+        t0 = time.perf_counter()
+        with span("planner.plan_knn",
+                  {"B": int(Q64.shape[0]), "k": int(k_eff)}):
+            s = self.ex.snap
+            qf = jnp.asarray(Q64, jnp.float32)
+            K, n_max, m = s.rids.shape
+            dq = np.asarray(jnp.sqrt(jnp.maximum(
+                ops.pdist(qf, s.pivots.reshape(K * m, s.d)), 0.0)))
+            self.ex._count_sync()
+            live_k = s.valid_np.reshape(K, n_max).any(axis=1)       # (K,)
+            dqm = np.where(np.repeat(live_k, m)[None], dq, np.inf)
+            r0 = dqm.min(axis=1).astype(np.float64) * (1.0 + _SEED_REL) \
+                + _BALL_ABS
+            plan = CandidatePlan(
+                kind="knn", B=Q64.shape[0], k=int(k_eff),
+                max_rounds=int(max_rounds), growth=2.0, radii=r0,
+                _planner=self, _qf=qf)
+        plan.plan_s = time.perf_counter() - t0
+        _obs.count("planner.plans_built")
+        return plan
 
     # -------------------------------------------------- round evaluation
     def eval_mask(self, qf: jax.Array, radii: np.ndarray) -> np.ndarray:
@@ -283,6 +303,7 @@ class Planner:
         backend evaluates the same math on device, inside its loop)."""
         cand, _ = self.ex._plan_arrays(qf, jnp.asarray(radii, jnp.float32))
         self.ex._count_sync()
+        _obs.count("planner.round_evals")
         return np.asarray(cand)
 
 

@@ -49,8 +49,23 @@ from .rankeval import rankeval_pallas
 from .xla import (pdist_rankeval_xla, pdist_xla, range_filter_xla,
                   rankeval_xla)
 
+from ..obs import registry as _obs
+
 _LANE = 128     # TPU lane width: last-dim tiles stay multiples of this
 _SUBLANE = 8    # f32 sublane width: leading-dim tiles align to this
+
+
+def _count_launch(name: str, mode: str, probe) -> None:
+    """Per-kernel dispatch counter (``kernels.<name>.launches`` plus a
+    per-lane breakdown).  These wrappers run both eagerly and inside
+    jit/shard_map traces; a traced call is bookkeeping at *trace* time,
+    not a launch per execution, so tracer operands are skipped — the
+    eager call sites (the planner's staged path, the paged backend's
+    per-round refinement) are the ones that count."""
+    if not _obs.enabled() or isinstance(probe, jax.core.Tracer):
+        return
+    _obs.count(f"kernels.{name}.launches")
+    _obs.count(f"kernels.{name}.{mode}")
 
 
 def _interpret() -> bool:
@@ -152,6 +167,7 @@ def pdist(q, p, metric: str = "sql2", bq: int | None = None,
     p = jnp.asarray(p)
     nq, npts = q.shape[0], p.shape[0]
     mode = kernel_mode()
+    _count_launch("pdist", mode, q)
     bq, bp = _qp_tiles(nq, npts, q.shape[1], metric, mode, bq, bp, "pdist")
     qp = _pad_rows(q, bq)
     pp = _pad_rows(p, bp)
@@ -174,6 +190,7 @@ def rankeval(x, coef, lo, hi, n, n_rings: int = 20,
     coef = jnp.asarray(coef, jnp.float32)
     g, b = x.shape
     mode = kernel_mode()
+    _count_launch("rankeval", mode, x)
     interp = mode == "interpret"
     if not interp and (bg is None or bb is None):
         t = autotune.tiles_for("rankeval", None,
@@ -212,6 +229,7 @@ def range_filter(q, p, r, bq: int | None = None, bp: int | None = None):
     r = jnp.asarray(r, jnp.float32)
     nq, npts = q.shape[0], p.shape[0]
     mode = kernel_mode()
+    _count_launch("range_filter", mode, q)
     bq, bp = _qp_tiles(nq, npts, q.shape[1], "sql2", mode, bq, bp,
                        "range_filter")
     qp = _pad_rows(q, bq)
@@ -244,6 +262,7 @@ def pdist_rankeval(q, piv, coef, lo, hi, n, rg, n_rings: int = 20,
     B, d = q.shape
     G, C = coef.shape
     mode = kernel_mode()
+    _count_launch("pdist_rankeval", mode, q)
     interp = mode == "interpret"
     if not interp and (bg is None or bb is None):
         t = autotune.tiles_for("pdist_rankeval", None,
@@ -279,6 +298,7 @@ def flash_attention(q, k, v, causal: bool = True, bq: int = 128,
     """Padded flash attention: (B,Hq,Sq,D) × (B,Hk,Sk,D) → (B,Hq,Sq,D)."""
     b, hq, sq, d = q.shape
     _, hk, sk, _ = k.shape
+    _count_launch("flash_attention", kernel_mode(), q)
     pq, pk = (-sq) % bq, (-sk) % bk
     if pq:
         q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))

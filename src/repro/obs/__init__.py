@@ -1,0 +1,34 @@
+"""Unified observability for the serving stack (DESIGN.md §11).
+
+One process-wide metrics registry (counters / gauges / bounded-reservoir
+histograms), a span tracer over the query path, per-batch
+``QueryProfile`` records, and exporters (JSON, Prometheus text, Chrome
+trace_event).  Controlled by ``REPRO_OBS=off|on|trace``; the disabled
+path costs one string compare and allocates nothing.
+
+    from repro import obs
+    with obs.span("my.stage"):
+        ...
+    obs.count("my.counter")
+    print(obs.json_snapshot())
+"""
+from .registry import (REGISTRY, Counter, Gauge, Histogram,  # noqa: F401
+                       MetricsRegistry, configure, count, enabled,
+                       obs_mode, observe, set_gauge, tracing)
+from .trace import (clear_trace, instant, span, trace_events,  # noqa: F401
+                    trace_len)
+from .profile import (QueryProfile, clear_profiles,  # noqa: F401
+                      last_profile, profiles, record_profile)
+from .export import (chrome_trace, json_snapshot,  # noqa: F401
+                     prometheus_text, write_chrome_trace,
+                     write_json_snapshot, write_prometheus)
+
+__all__ = [
+    "REGISTRY", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "QueryProfile", "chrome_trace", "clear_profiles", "clear_trace",
+    "configure", "count", "enabled", "instant", "json_snapshot",
+    "last_profile", "obs_mode", "observe", "profiles", "prometheus_text",
+    "record_profile", "set_gauge", "span", "trace_events", "trace_len",
+    "tracing", "write_chrome_trace", "write_json_snapshot",
+    "write_prometheus",
+]

@@ -1,0 +1,107 @@
+"""Exporters: registry + profiles + trace → JSON / Prometheus / Chrome.
+
+Three read-only renderings of the same state:
+
+* :func:`json_snapshot` — everything (mode, metrics, recent
+  QueryProfiles, trace depth) as one JSON-able dict; the programmatic
+  surface and what ``repro.obs.report --json`` writes.
+* :func:`prometheus_text` — the text exposition format (counters and
+  gauges as-is, histograms as summaries with quantile labels plus
+  ``_count``/``_sum``).  Metric names are sanitized (dots → underscores)
+  to the Prometheus grammar.
+* :func:`chrome_trace` / :func:`write_chrome_trace` — the span ring as a
+  Chrome Trace Event Format JSON object, loadable in Perfetto or
+  chrome://tracing.
+
+Exporters never mutate state and take the same locks the recorders do,
+so they are safe to call from a live serving process.
+"""
+from __future__ import annotations
+
+import json
+
+from . import profile as _prof
+from . import registry as _reg
+from . import trace as _trace
+
+
+def json_snapshot(n_profiles: int = 32) -> dict:
+    """One dict with the whole observability state (JSON-serializable)."""
+    return {
+        "mode": _reg.obs_mode(),
+        "metrics": _reg.REGISTRY.snapshot(),
+        "profiles": [p.as_dict() for p in _prof.profiles(n_profiles)],
+        "trace_events": _trace.trace_len(),
+    }
+
+
+def _prom_name(name: str) -> str:
+    out = []
+    for ch in name:
+        out.append(ch if ch.isalnum() or ch == "_" else "_")
+    s = "".join(out)
+    if s and s[0].isdigit():
+        s = "_" + s
+    return "lims_" + s
+
+
+def prometheus_text() -> str:
+    """The registry in Prometheus text exposition format."""
+    lines: list[str] = []
+    for m in _reg.REGISTRY.metrics():
+        pn = _prom_name(m.name)
+        if m.kind == "counter":
+            lines.append(f"# TYPE {pn} counter")
+            if m.help:
+                lines.append(f"# HELP {pn} {m.help}")
+            lines.append(f"{pn} {m.value}")
+        elif m.kind == "gauge":
+            lines.append(f"# TYPE {pn} gauge")
+            if m.help:
+                lines.append(f"# HELP {pn} {m.help}")
+            lines.append(f"{pn} {_fmt(m.value)}")
+        else:  # histogram → summary
+            lines.append(f"# TYPE {pn} summary")
+            if m.help:
+                lines.append(f"# HELP {pn} {m.help}")
+            for q in (0.5, 0.9, 0.99):
+                v = m.percentile(q * 100.0)
+                lines.append(f'{pn}{{quantile="{_fmt(q)}"}} {_fmt(v)}')
+            lines.append(f"{pn}_count {m.count}")
+            lines.append(f"{pn}_sum {_fmt(m.sum)}")
+    return "\n".join(lines) + "\n"
+
+
+def _fmt(v: float) -> str:
+    f = float(v)
+    if f == int(f) and abs(f) < 1e15:
+        return str(int(f))
+    return repr(f)
+
+
+def chrome_trace() -> dict:
+    """The span ring as a Chrome Trace Event Format dict."""
+    return _trace.trace_events()
+
+
+def write_chrome_trace(path: str) -> int:
+    """Write the Perfetto-loadable trace JSON to ``path``; returns the
+    number of events written (excluding thread-name metadata)."""
+    doc = chrome_trace()
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    return sum(1 for e in doc["traceEvents"] if e.get("ph") == "X")
+
+
+def write_json_snapshot(path: str, n_profiles: int = 32) -> None:
+    with open(path, "w") as f:
+        json.dump(json_snapshot(n_profiles), f, indent=2, sort_keys=True)
+
+
+def write_prometheus(path: str) -> None:
+    with open(path, "w") as f:
+        f.write(prometheus_text())
+
+
+__all__ = ["chrome_trace", "json_snapshot", "prometheus_text",
+           "write_chrome_trace", "write_json_snapshot", "write_prometheus"]

@@ -1,0 +1,97 @@
+"""``python -m repro.obs.report`` — export serving telemetry to files.
+
+Renders the process-wide observability state (metrics registry, recent
+``QueryProfile`` records, span trace) through the three exporters:
+
+    python -m repro.obs.report --demo \\
+        --json obs.json --prom obs.prom --trace obs.trace.json
+
+``--demo`` builds a tiny index, serves range/kNN/frontend traffic under
+``REPRO_OBS=trace``, and then exports — a one-command smoke check that
+every exporter produces well-formed output (CI runs exactly this).
+Without ``--demo`` the CLI exports whatever the current process already
+recorded, which only makes sense when embedded (``repro.obs.report
+.main([...])`` from a serving script).  With no output paths the JSON
+snapshot prints to stdout.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from . import export, profile, registry
+
+
+def _run_demo() -> None:
+    """Serve a small synthetic workload with full tracing enabled."""
+    import numpy as np
+
+    from ..core import LIMSIndex, MetricSpace, ServingEngine
+
+    registry.configure("trace")
+    rng = np.random.default_rng(0)
+    data = rng.standard_normal((600, 8))
+    ix = LIMSIndex(MetricSpace(data, "l2"), n_clusters=6, m=2, n_rings=6)
+    se = ServingEngine(ix, refresh_every=0)
+    Q = data[rng.choice(600, 16, replace=False)] + 0.01
+    se.range_query_batch(Q, 0.7)
+    se.knn_query_batch(Q, 5)
+    with se.frontend(max_batch=8, slo_ms=5.0) as fe:
+        import threading
+        threads = [threading.Thread(
+            target=fe.knn_query, args=(Q[j], 3)) for j in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    p = profile.last_profile()
+    assert p is not None and not p.missing(), \
+        f"demo must yield a complete QueryProfile, missing={p and p.missing()}"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description="Export LIMS serving telemetry "
+                    "(JSON / Prometheus / Chrome trace).")
+    ap.add_argument("--demo", action="store_true",
+                    help="serve a small synthetic workload first "
+                         "(trace mode) so there is telemetry to export")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the JSON snapshot here")
+    ap.add_argument("--prom", metavar="PATH",
+                    help="write Prometheus text format here")
+    ap.add_argument("--trace", metavar="PATH",
+                    help="write the Chrome trace_event file here "
+                         "(load in Perfetto / chrome://tracing)")
+    ap.add_argument("--profiles", type=int, default=32, metavar="N",
+                    help="recent QueryProfiles to include in the JSON "
+                         "snapshot (default 32)")
+    args = ap.parse_args(argv)
+
+    if args.demo:
+        _run_demo()
+
+    wrote = []
+    if args.json:
+        export.write_json_snapshot(args.json, n_profiles=args.profiles)
+        wrote.append(f"json snapshot -> {args.json}")
+    if args.prom:
+        export.write_prometheus(args.prom)
+        wrote.append(f"prometheus text -> {args.prom}")
+    if args.trace:
+        n = export.write_chrome_trace(args.trace)
+        wrote.append(f"chrome trace ({n} events) -> {args.trace}")
+    if wrote:
+        for line in wrote:
+            print(line)
+    else:
+        json.dump(export.json_snapshot(args.profiles), sys.stdout,
+                  indent=2, sort_keys=True)
+        print()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -36,6 +36,8 @@ import weakref
 
 from jax.sharding import Mesh
 
+from ..obs import registry as _obs
+from ..obs.trace import instant, span
 from ..storage import (DEFAULT_CACHE_PAGES, DEFAULT_PAGE_BYTES, PagedStore,
                        storage_mode)
 from ..core.executor import QueryExecutor, make_executor
@@ -271,12 +273,17 @@ class ServingEngine:
         """Rebuild the standby snapshot and swap it in atomically."""
         with self._update_lock:
             seen = self.pending_mutations
-            new = self._build_executor()
+            with span("engine.snapshot_build",
+                      {"pending_mutations": seen}):
+                new = self._build_executor()
             # the swap: one attribute store (GIL-atomic); the previous
             # executor moves to standby, kept alive for in-flight batches
             self._active, self._standby = new, self._active
             self.pending_mutations -= seen
             self.generation += 1
+            _obs.count("engine.refreshes")
+            instant("engine.snapshot_swap",
+                    {"generation": self.generation})
 
     def _spawn_refresh(self) -> None:
         with self._thread_lock:

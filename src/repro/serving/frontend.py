@@ -35,6 +35,9 @@ import time
 
 import numpy as np
 
+from ..obs import registry as _obs
+from ..obs.registry import Histogram
+from ..obs.trace import instant, span
 from .replicas import ReplicaSet
 from .router import PlanRouter
 
@@ -86,11 +89,19 @@ class ServingFrontend:
         self._pending: list[_Request] = []
         self._paused = False
         self._closed = False
-        # metrics (all mutated under self._cv)
+        # metrics (all mutated under self._cv).  Distributions live in
+        # bounded reservoirs — a long-running frontend holds O(cap)
+        # metric memory, not one float per request ever served.  These
+        # are *instance* histograms recording unconditionally:
+        # ``metrics()`` is part of the frontend's API contract and must
+        # work with REPRO_OBS=off; the process-wide registry mirrors
+        # are the mode-gated part.
         self._submitted = 0
         self._shed = 0
-        self._batch_sizes: list[int] = []
-        self._waits: list[float] = []
+        self._batches = 0
+        self._coalesced = 0
+        self._size_hist = Histogram("frontend.batch_size")
+        self._wait_hist = Histogram("frontend.queue_wait_s")
         self._router_obj: PlanRouter | None = None
         self._gen: int | None = None
         self._batcher = threading.Thread(
@@ -116,9 +127,12 @@ class ServingFrontend:
                 raise RuntimeError("frontend is closed")
             if len(self._pending) >= self._max_queue:
                 self._shed += 1
+                _obs.count("frontend.shed")
+                instant("frontend.shed", {"pending": len(self._pending)})
                 raise FrontendOverload(
                     f"queue full ({self._max_queue} pending)")
             self._submitted += 1
+            _obs.count("frontend.submitted")
             self._pending.append(req)
             self._cv.notify_all()
         req.event.wait()
@@ -159,26 +173,49 @@ class ServingFrontend:
     def _execute(self, batch: list) -> None:
         t_run = time.monotonic()
         try:
-            router = self._router()
-            Q = np.stack([r.q for r in batch])
-            if batch[0].kind == "range":
-                rs = np.array([r.arg for r in batch], np.float64)
-                for r, res in zip(batch, router.range_query_batch(Q, rs)):
-                    r.result = res
-            else:
-                ids, ds = router.knn_query_batch(Q, batch[0].arg)
-                for j, r in enumerate(batch):
-                    r.result = (ids[j], ds[j])
+            with span("frontend.execute",
+                      {"B": len(batch), "kind": batch[0].kind}):
+                router = self._router()
+                Q = np.stack([r.q for r in batch])
+                if batch[0].kind == "range":
+                    rs = np.array([r.arg for r in batch], np.float64)
+                    for r, res in zip(batch,
+                                      router.range_query_batch(Q, rs)):
+                        r.result = res
+                else:
+                    ids, ds = router.knn_query_batch(Q, batch[0].arg)
+                    for j, r in enumerate(batch):
+                        r.result = (ids[j], ds[j])
         except BaseException as e:
             for r in batch:
                 r.error = e
         finally:
-            with self._cv:
-                self._batch_sizes.append(len(batch))
-                self._waits.extend(t_run - r.t_in for r in batch)
+            waits = [t_run - r.t_in for r in batch]
+            self._obs_record(len(batch), waits)
             for r in batch:
                 r.t_run = t_run
                 r.event.set()
+
+    def _obs_record(self, size: int, waits: list) -> None:
+        """Fold one dispatched batch into the frontend's bounded metrics
+        and (mode permitting) the process-wide registry."""
+        with self._cv:
+            self._batches += 1
+            if size >= 2:
+                self._coalesced += 1
+            self._size_hist.observe(size)
+            for w in waits:
+                self._wait_hist.observe(w)
+        if _obs.enabled():
+            reg = _obs.REGISTRY
+            reg.counter("frontend.batches").inc()
+            reg.counter("frontend.queries").inc(size)
+            if size >= 2:
+                reg.counter("frontend.coalesced_batches").inc()
+            reg.histogram("frontend.batch_size").observe(size)
+            wh = reg.histogram("frontend.queue_wait_s")
+            for w in waits:
+                wh.observe(w)
 
     def _router(self) -> PlanRouter:
         """The router for the current snapshot generation (batcher-thread
@@ -187,9 +224,11 @@ class ServingFrontend:
         if self._router_obj is None or gen != self._gen:
             ex = self._engine.executor if self._engine is not None \
                 else self._executor
-            self._router_obj = PlanRouter(ReplicaSet(
-                ex.snap, n_replicas=self._n_replicas,
-                prefetch=self._prefetch))
+            with span("frontend.replica_rebuild", {"generation": gen}):
+                self._router_obj = PlanRouter(ReplicaSet(
+                    ex.snap, n_replicas=self._n_replicas,
+                    prefetch=self._prefetch))
+            _obs.count("frontend.replica_rebuilds")
             self._gen = gen
         return self._router_obj
 
@@ -224,28 +263,22 @@ class ServingFrontend:
         wait percentiles, shed rate — plus per-replica load when the
         router has run."""
         with self._cv:
-            sizes = list(self._batch_sizes)
-            waits = sorted(self._waits)
             submitted, shed = self._submitted, self._shed
+            batches, coalesced = self._batches, self._coalesced
         router = self._router_obj
-
-        def pct(p: float) -> float:
-            if not waits:
-                return 0.0
-            return waits[min(len(waits) - 1,
-                             int(round(p * (len(waits) - 1))))]
-
         out = {
             "submitted": submitted,
             "shed": shed,
             "shed_rate": round(shed / max(submitted + shed, 1), 4),
-            "batches": len(sizes),
-            "batch_size_mean": round(float(np.mean(sizes)), 2)
-            if sizes else 0.0,
-            "batch_size_max": max(sizes) if sizes else 0,
-            "coalesced_batches": sum(1 for s in sizes if s >= 2),
-            "queue_wait_ms_p50": round(pct(0.50) * 1e3, 3),
-            "queue_wait_ms_p99": round(pct(0.99) * 1e3, 3),
+            "batches": batches,
+            "batch_size_mean": round(self._size_hist.mean, 2)
+            if batches else 0.0,
+            "batch_size_max": int(self._size_hist.max) if batches else 0,
+            "coalesced_batches": coalesced,
+            "queue_wait_ms_p50": round(
+                self._wait_hist.percentile(50) * 1e3, 3),
+            "queue_wait_ms_p99": round(
+                self._wait_hist.percentile(99) * 1e3, 3),
         }
         if router is not None:
             out["routing"] = router.load_stats()

@@ -40,6 +40,7 @@ import jax
 
 from ..core.executor import QueryExecutor
 from ..core.snapshot import LIMSSnapshot
+from ..obs import registry as _obs
 
 
 class Replica:
@@ -57,6 +58,8 @@ class Replica:
         with self._lock:
             self.batches += 1
             self.queries += n_queries
+        _obs.count(f"replica.{self.rid}.batches")
+        _obs.count(f"replica.{self.rid}.queries", n_queries)
 
     def stats(self) -> dict:
         with self._lock:

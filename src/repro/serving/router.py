@@ -35,6 +35,8 @@ import threading
 
 import numpy as np
 
+from ..obs import registry as _obs
+from ..obs.trace import span
 from .replicas import ReplicaSet
 
 
@@ -84,6 +86,10 @@ class PlanRouter:
         """(B,) replica id per query: ownership votes over the plan's
         TriPrune routing, least-loaded tie-break, round-robin for
         unrouted queries."""
+        with span("router.assign", {"B": plan.B}):
+            return self._assign_inner(plan)
+
+    def _assign_inner(self, plan) -> np.ndarray:
         routing = plan.routing                       # (B, K) bool
         own = self.replicas.ownership()              # (R, K) bool
         votes = routing.astype(np.int64) @ own.T.astype(np.int64)  # (B, R)
@@ -113,28 +119,40 @@ class PlanRouter:
             idx = np.nonzero(pick == rep.rid)[0]
             if len(idx):
                 groups.append((rep, idx))
+        if _obs.enabled():
+            reg = _obs.REGISTRY
+            reg.counter("router.batches").inc()
+            reg.counter("router.queries").inc(plan.B)
+            reg.counter("router.subbatches").inc(len(groups))
+            # how widely one batch spreads across the replica set (1 =
+            # everything landed on a single replica)
+            reg.histogram("router.replica_spread").observe(len(groups))
         results = [None] * len(groups)
         errors = [None] * len(groups)
 
         def run(g: int, rep, idx) -> None:
             try:
-                sub = plan.subset(idx, planner=rep.ex.planner,
-                                  device=rep.device)
-                results[g] = getattr(rep.ex, method)(Q[idx], sub)
+                with span("router.subbatch",
+                          {"replica": rep.rid, "B": len(idx)}):
+                    sub = plan.subset(idx, planner=rep.ex.planner,
+                                      device=rep.device)
+                    results[g] = getattr(rep.ex, method)(Q[idx], sub)
                 rep.record(len(idx))
             except BaseException as e:  # re-raised on the caller thread
                 errors[g] = e
 
-        if len(groups) == 1:
-            run(0, *groups[0])
-        else:
-            threads = [threading.Thread(target=run, args=(g, rep, idx),
-                                        name=f"lims-route-r{rep.rid}")
-                       for g, (rep, idx) in enumerate(groups)]
-            for t in threads:
-                t.start()
-            for t in threads:
-                t.join()
+        with span("router.dispatch",
+                  {"B": plan.B, "groups": len(groups)}):
+            if len(groups) == 1:
+                run(0, *groups[0])
+            else:
+                threads = [threading.Thread(target=run, args=(g, rep, idx),
+                                            name=f"lims-route-r{rep.rid}")
+                           for g, (rep, idx) in enumerate(groups)]
+                for t in threads:
+                    t.start()
+                for t in threads:
+                    t.join()
         for err in errors:
             if err is not None:
                 raise err
@@ -145,10 +163,13 @@ class PlanRouter:
         """Fold the current heat signal into replica ownership: the page
         cache's per-cluster access counters when paged, the router's own
         routed-cluster counts when resident."""
-        heat = self.replicas.cluster_heat()
-        if heat is None or not heat.any():
-            heat = self.routed_heat
-        return self.replicas.rebalance(heat)
+        with span("router.rebalance"):
+            heat = self.replicas.cluster_heat()
+            if heat is None or not heat.any():
+                heat = self.routed_heat
+            moved = self.replicas.rebalance(heat)
+        _obs.count("router.rebalances")
+        return moved
 
     def load_stats(self) -> dict:
         return {"replicas": self.replicas.load_stats(),

@@ -57,9 +57,15 @@ class CacheStats:
     # buffer-pool counters
     requests: int = 0
     hits: int = 0
-    misses: int = 0
+    misses: int = 0             # demand page reads
     evictions: int = 0
     rows_gathered: int = 0
+    # speculative page reads issued by the async prefetcher
+    # (``fetch_pages(record=False)``): real file IO that is not a demand
+    # miss.  Total page reads = misses + prefetch_reads — the invariant
+    # that makes buffer-pool stats + prefetch stats sum to all IO
+    # (asserted in tests); before this counter that IO was invisible.
+    prefetch_reads: int = 0
     # per-query serving metrics (executor-recorded)
     batches: int = 0
     queries: int = 0
@@ -78,6 +84,8 @@ class CacheStats:
             "requests": self.requests, "hits": self.hits,
             "misses": self.misses, "evictions": self.evictions,
             "rows_gathered": self.rows_gathered,
+            "prefetch_reads": self.prefetch_reads,
+            "page_reads": self.misses + self.prefetch_reads,
             "hit_rate": round(self.hits / max(self.requests, 1), 4),
             "batches": self.batches, "queries": self.queries,
             "pages_per_query": round(self.pages_touched / q, 2),
@@ -86,8 +94,8 @@ class CacheStats:
 
     def reset(self) -> None:
         for f in ("requests", "hits", "misses", "evictions",
-                  "rows_gathered", "batches", "queries", "pages_touched",
-                  "candidates"):
+                  "rows_gathered", "prefetch_reads", "batches", "queries",
+                  "pages_touched", "candidates"):
             setattr(self, f, 0)
 
 

@@ -47,6 +47,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .. import env
+from ..obs import registry as _obs
 
 
 def prefetch_mode() -> str:
@@ -105,6 +106,7 @@ def _worker_loop() -> None:
                 prefetcher.store.fetch_pages(pages, record=False)
                 with prefetcher._lock:
                     prefetcher.pages_fetched += len(pages)
+                _obs.count("prefetch.pages_fetched", len(pages))
         except Exception:
             # a failed speculative read is a missed optimization, not an
             # error: the demand fetch will read (and raise) for real if
@@ -188,6 +190,8 @@ class PagePrefetcher:
         with self._lock:
             self.submitted += 1
             self.pages_submitted += len(pages)
+        _obs.count("prefetch.rounds_submitted")
+        _obs.count("prefetch.pages_submitted", len(pages))
         if _SHUTDOWN.is_set():
             _drop(self, pages)
             t._event.set()
@@ -208,11 +212,18 @@ class PagePrefetcher:
         if ticket is None or not len(ticket.pages):
             return
         dem = {int(p) for p in pages}
+        hits = sum(1 for p in ticket.pages if int(p) in dem)
+        overlapped = ticket.done()
         with self._lock:
-            self.demand_hits += sum(
-                1 for p in ticket.pages if int(p) in dem)
-            if ticket.done():
+            self.demand_hits += hits
+            if overlapped:
                 self.overlapped_rounds += 1
+        # speculation accuracy, process-wide: demand_hits /
+        # pages_submitted is the fraction of speculative IO a later
+        # round actually wanted
+        _obs.count("prefetch.demand_hits", hits)
+        if overlapped:
+            _obs.count("prefetch.overlapped_rounds")
 
     def drain(self) -> None:
         """Block until every prefetch queued so far has completed (a

@@ -29,8 +29,10 @@ cache, which is both the Pallas-refinement input (cast to f32 — the
 same cast the resident snapshot applies) and the exact f64 refinement
 input, so store-backed results are bit-identical to the in-memory path.
 ``record=False`` lets the async prefetcher pull pages in without
-touching the buffer-pool counters (its IO is speculative; the demand
-metrics keep meaning what queries asked for).
+touching the demand-side buffer-pool counters (its IO is speculative;
+the demand metrics keep meaning what queries asked for) — its reads
+are charged to ``stats.prefetch_reads`` instead, so misses +
+prefetch_reads always equals total page IO.
 """
 from __future__ import annotations
 
@@ -42,6 +44,7 @@ import weakref
 
 import numpy as np
 
+from ..obs import registry as _obs
 from .cache import DEFAULT_CACHE_PAGES, CacheStats, LRUPageCache
 from .layout import DEFAULT_PAGE_BYTES, PageLayout, rows_per_page
 from .manifest import FORMAT_VERSION, PAGES_NAME, Manifest, write_atomic
@@ -241,34 +244,48 @@ class PagedStore:
                     record: bool = True) -> None:
         """Ensure ``pages`` (of ``file``; default the current
         generation's) are cached; missing ones read as runs.
-        ``record=False`` skips the buffer-pool counters — the async
-        prefetcher's speculative IO keeps its own ledger."""
+        ``record=False`` skips the demand-side buffer-pool counters —
+        the async prefetcher's speculative IO — but the reads still
+        land in ``prefetch_reads``, so misses + prefetch_reads is
+        always the total page IO (no invisible reads)."""
         with self._lock:
             file = file if file is not None else self.manifest.pages_file
             st = self.stats
             missing = []
+            hits = 0
             for pid in np.asarray(pages, dtype=np.int64):
                 pid = int(pid)
                 if record:
                     st.requests += 1
                 if self.cache.touch((file, pid)):
-                    if record:
-                        st.hits += 1
+                    hits += 1
                 else:
                     missing.append(pid)
+            if record:
+                st.hits += hits
+                _obs.count("storage.page_requests", len(pages))
+                _obs.count("storage.cache_hits", hits)
             if not missing:         # fully cache-resident: no file IO,
                 return              # and no mapping of a retired file
             rpp = self.layout.rows_per_page
             mm = self._mmap_for(file)
+            evs = 0
             for a, b in page_runs(np.asarray(missing, np.int64)):
                 block = np.array(mm[a * rpp:b * rpp], dtype=np.float64)
                 for j, pid in enumerate(range(a, b)):
-                    ev = self.cache.put(
+                    evs += self.cache.put(
                         (file, pid), block[j * rpp:(j + 1) * rpp])
-                    if record:
-                        st.evictions += ev
                 if record:
                     st.misses += b - a
+                else:
+                    st.prefetch_reads += b - a
+            # evictions are real whoever triggered the insert — an
+            # uncounted speculative insert could silently thrash the pool
+            st.evictions += evs
+            _obs.count("storage.page_reads" if record
+                       else "storage.prefetch_reads", len(missing))
+            if evs:
+                _obs.count("storage.evictions", evs)
 
     def fetch(self, plan: IOPlan, file: str | None = None) -> None:
         """Execute an IO-batch plan: each deduped page read at most once
@@ -285,6 +302,9 @@ class PagedStore:
         with self._lock:
             file = file if file is not None else self.manifest.pages_file
             self.cache.pin([(file, int(p)) for p in np.asarray(pages)])
+            pinned = self.cache.pinned
+        _obs.count("storage.page_pins", len(pages))
+        _obs.set_gauge("storage.pinned_pages", pinned)
 
     def unpin_pages(self, pages: np.ndarray,
                     file: str | None = None) -> None:
@@ -293,8 +313,13 @@ class PagedStore:
         immediately (counted with the regular eviction stats)."""
         with self._lock:
             file = file if file is not None else self.manifest.pages_file
-            self.stats.evictions += self.cache.unpin(
+            evs = self.cache.unpin(
                 [(file, int(p)) for p in np.asarray(pages)])
+            self.stats.evictions += evs
+            pinned = self.cache.pinned
+        if evs:
+            _obs.count("storage.evictions", evs)
+        _obs.set_gauge("storage.pinned_pages", pinned)
 
     def cluster_heat(self, layout: PageLayout | None = None,
                      file: str | None = None) -> np.ndarray:
@@ -354,6 +379,7 @@ class PagedStore:
                     block = self.cache.peek((file, int(sp[a])))
                 out[order[a:b]] = block[so[a:b]]
             self.stats.rows_gathered += len(slots)
+        _obs.count("storage.rows_gathered", len(slots))
         return out
 
     def view(self, layout: PageLayout | None = None,
@@ -368,6 +394,9 @@ class PagedStore:
         read-modify-writes would lose counts)."""
         with self._lock:
             self.stats.record_queries(pages_per_query, cand_per_query)
+        _obs.count("storage.queries", len(pages_per_query))
+        _obs.count("storage.pages_touched", int(np.sum(pages_per_query)))
+        _obs.count("storage.candidates", int(np.sum(cand_per_query)))
 
     def read_cluster(self, k: int) -> np.ndarray:
         """(n_max, d) f64 bulk read of one cluster extent (no cache —
