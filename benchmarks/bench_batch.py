@@ -76,7 +76,11 @@ SERVING_CONFIGS = tuple(
        # the same golden no-regression bar as every other config — the
        # obs-overhead acceptance gate.  The other configs run at the
        # REPRO_OBS default ("on"), so the bar also covers metrics-on.
-       ("obs-trace", 1, {"REPRO_OBS": "trace"})])
+       ("obs-trace", 1, {"REPRO_OBS": "trace"}),
+       # continuous health monitoring: the background sampler thread +
+       # detectors live (DESIGN.md §12), held to the same golden bar —
+       # the monitor must not tax the query path it watches.
+       ("monitor", 1, {"REPRO_MONITOR": "on"})])
 
 
 def _bench(fn, reps: int) -> float:
@@ -249,6 +253,12 @@ def serving_worker() -> dict:
     from repro.data.datasets import gauss_mix
     from repro.core.serving import ServingEngine
     from repro.kernels.dispatch import kernel_mode
+    from repro.obs.monitor import maybe_monitor
+
+    # the "monitor" config's overhead gate: with REPRO_MONITOR=on the
+    # sampler thread ticks (probes + series + detectors) for the whole
+    # worker run, and the q/s below must still clear the golden bar
+    mon = maybe_monitor()
 
     n = 4_000 if QUICK else 12_000
     d = 8
@@ -428,6 +438,11 @@ def serving_worker() -> dict:
                   "profiles": len(obs.profiles()),
                   "trace_events": obs.trace_len(),
                   "counters": scalars}
+    if mon is not None:
+        rec["obs"]["monitor"] = {"ticks": mon.store.ticks,
+                                 "series": len(mon.store.names()),
+                                 "findings": len(mon.findings())}
+        mon.stop()
     return rec
 
 
@@ -452,6 +467,7 @@ def bench_serving_scaling(configs=SERVING_CONFIGS,
         env["REPRO_PREFETCH"] = ""
         env["REPRO_INTERPRET"] = ""
         env["REPRO_OBS"] = ""           # blank -> the default ("on")
+        env["REPRO_MONITOR"] = ""       # blank -> the default ("off")
         env.pop("BENCH_LOAD", None)
         env.update(extra_env)
         if real_io:

@@ -46,6 +46,15 @@ from .common import QUICK, emit
 LOAD_FRACTIONS = (0.25, 0.5, 1.0, 2.0, 4.0)
 KNEE_P99_FACTOR = 5.0
 
+# per-level SLO accounting (DESIGN.md §12): a request attains the SLO
+# when its open-loop latency lands under this target; a shed request is
+# a miss (admission control refusing work does not excuse the service
+# objective).  burn_rate = miss fraction over the error budget
+# (1 - objective): 1.0 spends the budget exactly, the monitor's
+# SloBurnDetector alerts at 2x.
+SLO_TARGET_MS = 50.0
+SLO_OBJECTIVE = 0.99
+
 
 def _measure_capacity(fe, Q, k: int, n: int, n_threads: int = 8) -> float:
     """Closed-loop q/s through the frontend: the denominator the load
@@ -78,7 +87,9 @@ def _run_level(fe, Q, k: int, offered_qps: float, n: int,
     gaps = rng.exponential(1.0 / offered_qps, n)
     arrivals = np.cumsum(gaps)          # offsets from t0
     lat = Histogram(f"load.latency_s.{offered_qps:.0f}")
-    shed = threading.Lock(), [0]
+    lock = threading.Lock()
+    counts = {"shed": 0, "slo_ok": 0}
+    target_s = SLO_TARGET_MS / 1e3
 
     def fire(i: int, at: float, t0: float) -> None:
         delay = t0 + at - time.perf_counter()
@@ -87,10 +98,14 @@ def _run_level(fe, Q, k: int, offered_qps: float, n: int,
         try:
             fe.knn_query(Q[i % len(Q)], k)
         except FrontendOverload:
-            with shed[0]:
-                shed[1][0] += 1
+            with lock:
+                counts["shed"] += 1
             return
-        lat.observe(time.perf_counter() - (t0 + at))
+        took = time.perf_counter() - (t0 + at)
+        lat.observe(took)
+        if took <= target_s:
+            with lock:
+                counts["slo_ok"] += 1
 
     t0 = time.perf_counter()
     threads = [threading.Thread(target=fire, args=(i, arrivals[i], t0))
@@ -101,12 +116,18 @@ def _run_level(fe, Q, k: int, offered_qps: float, n: int,
         t.join()
     elapsed = time.perf_counter() - t0
     done = lat.count
+    shed_n = counts["shed"]
+    # SLO accounting: shed requests are misses, so attainment is
+    # ok / offered (done + shed), not ok / completed
+    attained = counts["slo_ok"] / max(done + shed_n, 1)
     return {
         "offered_qps": round(offered_qps, 1),
         "n": n,
         "completed": done,
-        "shed": shed[1][0],
+        "shed": shed_n,
         "achieved_qps": round(done / elapsed, 1),
+        "slo_attained": round(attained, 4),
+        "burn_rate": round((1.0 - attained) / (1.0 - SLO_OBJECTIVE), 2),
         "latency_ms_p50": round(lat.percentile(50) * 1e3, 3),
         "latency_ms_p95": round(lat.percentile(95) * 1e3, 3),
         "latency_ms_p99": round(lat.percentile(99) * 1e3, 3),
@@ -162,6 +183,8 @@ def bench_latency_under_load(se, Q, k: int = 10, *,
                       "scheduled arrival (no coordinated omission)",
         "capacity_closed_loop_qps": round(cap_closed, 1),
         "capacity_qps": round(cap, 1),
+        "slo_target_ms": SLO_TARGET_MS,
+        "slo_objective": SLO_OBJECTIVE,
         "k": k,
         "n_per_level": n_per_level,
         "levels": levels,
@@ -195,7 +218,8 @@ def main() -> None:
              f"offered_qps={lv['offered_qps']} "
              f"achieved_qps={lv['achieved_qps']} "
              f"p50_ms={lv['latency_ms_p50']} "
-             f"p99_ms={lv['latency_ms_p99']} shed={lv['shed']}")
+             f"p99_ms={lv['latency_ms_p99']} shed={lv['shed']} "
+             f"slo={lv['slo_attained']:.2%} burn={lv['burn_rate']}x")
     knee = rec["knee"]
     print(f"# capacity_qps={rec['capacity_qps']} knee="
           f"{knee['offered_frac'] if knee else 'none'}"

@@ -256,6 +256,41 @@ def main() -> None:
           f"{n_events} trace events -> {trace_path} "
           f"(load in Perfetto). OK")
 
+    # 10) continuous health monitoring (DESIGN.md §12): inject placement
+    # drift — pin every cluster's ownership to replica 0 while query
+    # heat stays spread — then drive manual monitor ticks and watch the
+    # closed loop repair it: the heat-skew detector fires a finding, the
+    # MonitorDaemon rebalances ownership from live heat (within its
+    # action cooldown), and the health report shows the recovery.
+    # Results stay bit-identical throughout: ownership only biases
+    # routing, never answers.
+    from repro.obs.monitor import Monitor
+    from repro.serving import MonitorDaemon, PlanRouter, ReplicaSet
+    snap = cold.executor.snap
+    replicas = ReplicaSet(snap, n_replicas=4)
+    router = PlanRouter(replicas)
+    mon = Monitor(interval=3600.0)          # ticked by hand below
+    daemon = MonitorDaemon(mon, lambda: router, engine=cold,
+                           cooldown_ticks=3)
+    baseline_ids, _ = router.knn_query_batch(fresh, 3)
+    replicas.set_ownership(np.zeros(snap.K, np.int64))   # the drift
+    for _ in range(6):
+        ids, _ = router.knn_query_batch(fresh, 3)
+        assert np.array_equal(ids, baseline_ids), \
+            "results must stay exact under drift and rebalance"
+        mon.tick()
+    findings = [f for f in mon.findings() if f.detector == "heat_skew"]
+    rebalances = [e for e in daemon.events() if e["action"] == "rebalance"]
+    assert findings and rebalances, \
+        "injected drift must fire a finding and a rebalance"
+    from repro.obs.report import render_health
+    print(render_health(mon, daemon))
+    print(f"monitoring: drift skew {findings[0].value:.1f}x fired at "
+          f"tick {findings[0].tick}, daemon rebalanced at tick "
+          f"{rebalances[0]['tick']}, post-rebalance skew "
+          f"{mon.store.get('router.heat_skew').last():.2f}x; results "
+          f"bit-identical throughout. OK")
+
 
 if __name__ == "__main__":
     main()

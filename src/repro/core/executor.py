@@ -517,6 +517,10 @@ class QueryExecutor:
         # per-thread sync counter: executors serve lock-free concurrent
         # query threads, and one batch's count must not absorb another's
         self._tls = threading.local()
+        # host mirrors of the model/ring fields for the observed
+        # rank-error health stat; materialized once on first profiled
+        # batch (never on the off path), see _health_arrays
+        self._health: SimpleNamespace | None = None
 
     @property
     def live(self) -> int:
@@ -613,9 +617,91 @@ class QueryExecutor:
             candidates_per_query=float(cand.mean()),
             clusters_per_query=float(clusters.mean()),
             n_clusters=int(K), stages=stages,
-            total_s=time.perf_counter() - t0 + plan.plan_s)
+            total_s=time.perf_counter() - t0 + plan.plan_s,
+            rank_err_ratio=self._observed_rank_err(final))
         self.last_profile = prof
         record_profile(prof)
+
+    # how many certified candidates the rank-health stat replays per
+    # batch (host f32 math over cache-hot rows — bounded, not per-row)
+    _HEALTH_SAMPLE = 32
+
+    def _health_arrays(self) -> SimpleNamespace:
+        """Host mirrors of the model/ring fields, materialized once per
+        executor so the per-batch health stat adds no device work."""
+        h = self._health
+        if h is None:
+            s = self.snap
+            h = SimpleNamespace(
+                rids=np.asarray(s.rids),                     # (K, n_max, m)
+                pivots=np.asarray(s.pivots, np.float32),     # (K, m, d)
+                coef=np.asarray(s.coef, np.float32),         # (K, m, C)
+                lo=np.asarray(s.model_lo, np.float32),       # (K, m)
+                hi=np.asarray(s.model_hi, np.float32),
+                n=np.asarray(s.model_n, np.float32),
+                err=np.asarray(s.rank_err, np.float32),      # (K, m)
+                in_ring=np.asarray(s.in_ring).reshape(-1),   # (K*n_max,)
+            )
+            self._health = h
+        return h
+
+    def _observed_rank_err(self, final: np.ndarray) -> float | None:
+        """Observed rank-model error over this batch, as a fraction of
+        the certified bound E (DESIGN.md §12).
+
+        Samples up to ``_HEALTH_SAMPLE`` certified in-ring candidate
+        slots from the final mask (deterministic stride — no RNG on the
+        query path), recomputes their pivot distances from the rows
+        refinement just gathered (cache-hot), replays the kernel's
+        ``rank_math`` arithmetic in host f32 numpy, and compares the
+        predicted ring id against the one the build stored.  Ratio 1.0
+        means predictions are off by as much as the ring-widening
+        budget E assumes; the rank-drift detector watches the
+        per-cluster gauges this emits.  Returns the sample-mean ratio,
+        or None when the batch certified no in-ring rows.  Buffer rows
+        (``in_ring`` False) bypass the model and are skipped."""
+        s = self.snap
+        K, n_max, m = s.rids.shape
+        h = self._health_arrays()
+        slots = np.nonzero(final.any(axis=0) & h.in_ring)[0]
+        if slots.size == 0:
+            return None
+        if slots.size > self._HEALTH_SAMPLE:
+            step = slots.size // self._HEALTH_SAMPLE
+            slots = slots[::step][:self._HEALTH_SAMPLE]
+        rows = np.asarray(self._refine_rows(slots), np.float32)  # (S, d)
+        kk = slots // n_max
+        jj = slots % n_max
+        x = np.sqrt(((rows[:, None, :] - h.pivots[kk]) ** 2).sum(-1))
+        # replay rank_math (kernels/rankeval.py) in f32: normalize,
+        # Clenshaw high→low, rank → ring id
+        lo, hi, nn = h.lo[kk], h.hi[kk], h.n[kk]                 # (S, m)
+        t = np.clip((x - lo) / np.maximum(hi - lo, np.float32(1e-30))
+                    * 2.0 - 1.0, -1.0, 1.0).astype(np.float32)
+        coef = h.coef[kk]                                        # (S, m, C)
+        b1 = np.zeros_like(t)
+        b2 = np.zeros_like(t)
+        t2 = 2.0 * t
+        for c in range(coef.shape[-1] - 1, 0, -1):
+            b1, b2 = coef[..., c] + t2 * b1 - b2, b1
+        r = coef[..., 0] + t * b1 - b2
+        rank = np.clip(np.rint(r), 0.0, np.maximum(nn - 1.0, 0.0))
+        width = np.ceil(nn / np.float32(s.n_rings))
+        pred = np.clip(np.floor(rank / np.maximum(width, 1.0)), 0.0,
+                       np.float32(s.n_rings - 1))
+        act = h.rids[kk, jj]                                     # (S, m)
+        ok = act >= 0
+        if not ok.any():
+            return None
+        ratio = np.where(
+            ok, np.abs(pred - act) * width / np.maximum(h.err[kk], 1.0),
+            0.0)
+        for k in np.unique(kk):
+            _obs.set_gauge(f"executor.rank_err_ratio.c{int(k)}",
+                           float(ratio[kk == k].max()))
+        mean = float(ratio.sum() / ok.sum())
+        _obs.observe("executor.rank_err_ratio", mean)
+        return mean
 
     # ----------------------------------------------------- refinement data
     def _refine_rows(self, idx: np.ndarray) -> np.ndarray:

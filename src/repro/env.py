@@ -80,6 +80,27 @@ _KNOBS = (
     Knob("REPRO_OBS_PROFILES", None, "256",
          "QueryProfile ring capacity: most recent per-batch serving "
          "profiles kept."),
+    Knob("REPRO_MONITOR",
+         ("", "off", "on"), "off",
+         "Continuous health monitoring (repro.obs.monitor; DESIGN.md "
+         "§12): off (zero-thread, zero-allocation path), on (background "
+         "sampler thread snapshotting registry metrics into time "
+         "series, health detectors, and the closed-loop serving "
+         "daemon)."),
+    Knob("REPRO_MONITOR_INTERVAL", None, "0.5",
+         "Monitor sampler tick interval in seconds (float)."),
+    Knob("REPRO_MONITOR_SERIES_CAP", None, "512",
+         "Time-series ring capacity: most recent samples kept per "
+         "monitored series."),
+    Knob("REPRO_MONITOR_FINDINGS", None, "256",
+         "Health-finding ring capacity: most recent detector findings "
+         "kept by a monitor."),
+    Knob("REPRO_MONITOR_RETRAIN",
+         ("", "off", "recommend", "auto"), "off",
+         "Closed-loop reaction to rank-model drift findings: off "
+         "(ignore), recommend (surface retrain recommendations on the "
+         "ServingEngine), auto (additionally trigger "
+         "retrain_cluster)."),
 )
 
 KNOBS: dict[str, Knob] = {k.name: k for k in _KNOBS}

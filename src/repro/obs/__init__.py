@@ -22,13 +22,25 @@ from .profile import (QueryProfile, clear_profiles,  # noqa: F401
 from .export import (chrome_trace, json_snapshot,  # noqa: F401
                      prometheus_text, write_chrome_trace,
                      write_json_snapshot, write_prometheus)
+from .timeseries import Series, SeriesStore, sparkline  # noqa: F401
+from .health import (Detector, HealthFinding,  # noqa: F401
+                     HeatSkewDetector, PruningRegressionDetector,
+                     RankDriftDetector, SloBurnDetector,
+                     default_detectors)
+from .monitor import (Monitor, active_monitors,  # noqa: F401
+                      configure_monitor, maybe_monitor, monitor_enabled,
+                      monitor_mode, shutdown_monitors)
 
 __all__ = [
-    "REGISTRY", "Counter", "Gauge", "Histogram", "MetricsRegistry",
-    "QueryProfile", "chrome_trace", "clear_profiles", "clear_trace",
-    "configure", "count", "enabled", "instant", "json_snapshot",
-    "last_profile", "obs_mode", "observe", "profiles", "prometheus_text",
-    "record_profile", "set_gauge", "span", "trace_events", "trace_len",
-    "tracing", "write_chrome_trace", "write_json_snapshot",
-    "write_prometheus",
+    "REGISTRY", "Counter", "Detector", "Gauge", "HealthFinding",
+    "HeatSkewDetector", "Histogram", "MetricsRegistry", "Monitor",
+    "PruningRegressionDetector", "QueryProfile", "RankDriftDetector",
+    "Series", "SeriesStore", "SloBurnDetector", "active_monitors",
+    "chrome_trace", "clear_profiles", "clear_trace", "configure",
+    "configure_monitor", "count", "default_detectors", "enabled",
+    "instant", "json_snapshot", "last_profile", "maybe_monitor",
+    "monitor_enabled", "monitor_mode", "obs_mode", "observe", "profiles",
+    "prometheus_text", "record_profile", "set_gauge", "shutdown_monitors",
+    "span", "sparkline", "trace_events", "trace_len", "tracing",
+    "write_chrome_trace", "write_json_snapshot", "write_prometheus",
 ]

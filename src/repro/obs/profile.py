@@ -64,6 +64,10 @@ class QueryProfile:
     n_clusters: int              # K, for interpreting the pruning power
     stages: dict = field(default_factory=dict)   # stage → seconds
     total_s: float = 0.0
+    # observed rank-model error as a fraction of the certified bound E
+    # (host-sampled over this batch's certified in-ring candidates; None
+    # when the batch had none — optional, NOT in REQUIRED_FIELDS)
+    rank_err_ratio: float | None = None
 
     def as_dict(self) -> dict:
         return {
@@ -76,6 +80,8 @@ class QueryProfile:
             "candidates_per_query": round(self.candidates_per_query, 2),
             "clusters_per_query": round(self.clusters_per_query, 2),
             "n_clusters": self.n_clusters,
+            "rank_err_ratio": (round(self.rank_err_ratio, 4)
+                               if self.rank_err_ratio is not None else None),
             "stages_ms": {k: round(v * 1e3, 3)
                           for k, v in self.stages.items()},
             "total_ms": round(self.total_s * 1e3, 3),
@@ -120,6 +126,8 @@ def record_profile(p: QueryProfile) -> None:
     r.histogram("profile.rounds").observe(p.rounds)
     r.histogram("profile.host_syncs").observe(p.host_syncs)
     r.histogram("profile.total_s").observe(p.total_s)
+    if p.rank_err_ratio is not None:
+        r.histogram("profile.rank_err_ratio").observe(p.rank_err_ratio)
     for stage, dt in p.stages.items():
         r.histogram(f"profile.stage.{stage}_s").observe(dt)
 

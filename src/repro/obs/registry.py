@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import threading
 import zlib
+from bisect import bisect_left
 from random import Random
 
 from .. import env
@@ -161,6 +162,14 @@ class Gauge:
         return self._v
 
 
+# fixed log-spaced Prometheus bucket bounds: half-decade steps covering
+# ~3.2e-7 .. 1e4 — wide enough for latencies in seconds, queue depths,
+# candidate counts, and page tallies without per-metric tuning.  Exact
+# counts below/above the range still land in the first / +Inf bucket.
+DEFAULT_BUCKET_BOUNDS: tuple[float, ...] = tuple(
+    10.0 ** (e / 2.0) for e in range(-13, 9))
+
+
 class Histogram:
     """Bounded-reservoir distribution with exact count/sum/min/max.
 
@@ -171,19 +180,29 @@ class Histogram:
     ``cap/count`` — so memory stays O(cap) while the reservoir remains
     a uniform sample of everything observed.  The RNG is seeded from
     the metric name, so runs are reproducible.
+
+    Alongside the reservoir each histogram keeps *exact* fixed-bound
+    bucket counts (``bounds``, default :data:`DEFAULT_BUCKET_BOUNDS`,
+    recorded at creation) so the Prometheus exporter can emit real
+    cumulative ``_bucket``/``le`` lines — burn-rate recording rules
+    need them, and unlike the reservoir they never subsample.
     """
 
-    __slots__ = ("name", "help", "cap", "_res", "_count", "_sum", "_min",
-                 "_max", "_rng", "_lock")
+    __slots__ = ("name", "help", "cap", "bounds", "_bcounts", "_res",
+                 "_count", "_sum", "_min", "_max", "_rng", "_lock")
 
     kind = "histogram"
 
-    def __init__(self, name: str, cap: int | None = None, help: str = ""):
+    def __init__(self, name: str, cap: int | None = None, help: str = "",
+                 bounds: tuple[float, ...] | None = None):
         self.name = name
         self.help = help
         self.cap = int(cap) if cap is not None else default_reservoir()
         if self.cap < 1:
             raise ValueError("histogram reservoir cap must be >= 1")
+        self.bounds = tuple(sorted(float(b) for b in (
+            bounds if bounds is not None else DEFAULT_BUCKET_BOUNDS)))
+        self._bcounts = [0] * (len(self.bounds) + 1)  # last = overflow/+Inf
         self._res: list[float] = []
         self._count = 0
         self._sum = 0.0
@@ -201,12 +220,27 @@ class Histogram:
                 self._min = x
             if x > self._max:
                 self._max = x
+            # bisect_left puts x == bounds[i] into bucket i, matching
+            # Prometheus' inclusive `le` semantics after cumsum
+            self._bcounts[bisect_left(self.bounds, x)] += 1
             if len(self._res) < self.cap:
                 self._res.append(x)
             else:
                 j = self._rng.randrange(self._count)
                 if j < self.cap:
                     self._res[j] = x
+
+    def buckets(self) -> tuple[tuple[float, ...], list[int]]:
+        """(bounds, cumulative counts) with a final +Inf entry equal to
+        ``count`` — exactly the series a Prometheus ``_bucket`` family
+        renders."""
+        with self._lock:
+            raw = list(self._bcounts)
+        cum, total = [], 0
+        for c in raw:
+            total += c
+            cum.append(total)
+        return self.bounds, cum
 
     @property
     def count(self) -> int:
@@ -258,6 +292,7 @@ class Histogram:
             self._sum = 0.0
             self._min = float("inf")
             self._max = float("-inf")
+            self._bcounts = [0] * (len(self.bounds) + 1)
 
     def snapshot(self) -> dict:
         with self._lock:
@@ -369,6 +404,7 @@ def set_gauge(name: str, v: float) -> None:
     REGISTRY.gauge(name).set(v)
 
 
-__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry", "REGISTRY",
-           "configure", "count", "default_reservoir", "enabled", "obs_mode",
-           "observe", "set_gauge", "tracing"]
+__all__ = ["Counter", "DEFAULT_BUCKET_BOUNDS", "Gauge", "Histogram",
+           "MetricsRegistry", "REGISTRY", "configure", "count",
+           "default_reservoir", "enabled", "obs_mode", "observe",
+           "set_gauge", "tracing"]

@@ -16,10 +16,11 @@ query submitted through the frontend returns bit-identical results to
 a direct ``QueryExecutor`` call.  ``repro.core.serving`` remains as a
 compatibility shim for ``ServingEngine``.
 """
+from .daemon import MonitorDaemon
 from .engine import ServingEngine
 from .frontend import FrontendOverload, ServingFrontend
 from .replicas import Replica, ReplicaSet
 from .router import PlanRouter
 
 __all__ = ["ServingEngine", "ServingFrontend", "FrontendOverload",
-           "Replica", "ReplicaSet", "PlanRouter"]
+           "MonitorDaemon", "Replica", "ReplicaSet", "PlanRouter"]

@@ -33,6 +33,7 @@ import shutil
 import tempfile
 import threading
 import weakref
+from collections import deque
 
 from jax.sharding import Mesh
 
@@ -111,6 +112,9 @@ class ServingEngine:
         self._refresh_again = False
         self.generation = 0
         self.pending_mutations = 0
+        # retrain recommendations surfaced by the monitor daemon
+        # (bounded: a serving window, not a log)
+        self._retrain_recs: deque = deque(maxlen=64)
         if _initial is not None:
             self._active: QueryExecutor = _initial
             view = getattr(_initial.snap, "store", None)
@@ -248,6 +252,28 @@ class ServingEngine:
             self.pending_mutations += self._refresh_every
             pending = self.pending_mutations
         self._maybe_refresh(pending)
+
+    def recommend_retrain(self, c: int, reason: str = "") -> dict:
+        """Record a retrain recommendation for cluster ``c`` (bounded
+        ring, newest kept) — the monitor daemon surfaces rank-model
+        drift findings here under ``REPRO_MONITOR_RETRAIN=recommend``;
+        operators (or the daemon's ``auto`` mode) act on them.  Returns
+        the recorded entry."""
+        rec = {"cluster": int(c), "reason": str(reason),
+               "generation": self.generation}
+        with self._update_lock:
+            self._retrain_recs.append(rec)
+        _obs.count("engine.retrain_recommendations")
+        return rec
+
+    def retrain_recommendations(self) -> list:
+        """Pending retrain recommendations, oldest first."""
+        with self._update_lock:
+            return list(self._retrain_recs)
+
+    def clear_retrain_recommendations(self) -> None:
+        with self._update_lock:
+            self._retrain_recs.clear()
 
     def compact(self):
         """Reclaim the paged store's garbage extents: rewrite live

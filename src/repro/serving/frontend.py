@@ -35,9 +35,12 @@ import time
 
 import numpy as np
 
+from ..obs import monitor as _mon
 from ..obs import registry as _obs
+from ..obs.monitor import Monitor
 from ..obs.registry import Histogram
 from ..obs.trace import instant, span
+from .daemon import MonitorDaemon
 from .replicas import ReplicaSet
 from .router import PlanRouter
 
@@ -73,7 +76,9 @@ class ServingFrontend:
 
     def __init__(self, target, *, n_replicas: int | None = None,
                  max_batch: int = 32, slo_ms: float = 2.0,
-                 max_queue: int = 256, prefetch: str | None = None):
+                 max_queue: int = 256, prefetch: str | None = None,
+                 slo_target_ms: float | None = None,
+                 monitor: "bool | Monitor | None" = None):
         if max_batch < 1 or max_queue < 1:
             raise ValueError("max_batch and max_queue must be >= 1")
         # engine-like targets expose .executor + .generation; a bare
@@ -102,11 +107,34 @@ class ServingFrontend:
         self._coalesced = 0
         self._size_hist = Histogram("frontend.batch_size")
         self._wait_hist = Histogram("frontend.queue_wait_s")
+        # end-to-end completion SLO: slo_ms bounds *coalescing wait*;
+        # the completion target a request is judged against must also
+        # absorb execution, so it defaults to 20x the batching budget.
+        # A shed request burns budget too — it counts as a miss.
+        self._slo_target = (float(slo_target_ms) if slo_target_ms is not None
+                            else 20.0 * float(slo_ms)) / 1e3
+        self._slo_ok = 0
+        self._slo_miss = 0
+        self._lat_hist = Histogram("frontend.request_latency_s")
         self._router_obj: PlanRouter | None = None
         self._gen: int | None = None
         self._batcher = threading.Thread(
             target=self._batch_loop, daemon=True, name="lims-frontend")
         self._batcher.start()
+        # continuous health monitoring (DESIGN.md §12): None → the
+        # REPRO_MONITOR knob; True / a Monitor instance force it on.
+        # The daemon subscribes the router + engine to the findings and
+        # the monitor thread samples until close().
+        self.monitor: Monitor | None = None
+        self.daemon: MonitorDaemon | None = None
+        if monitor is None:
+            monitor = _mon.monitor_enabled()
+        if monitor:
+            mon = monitor if isinstance(monitor, Monitor) else Monitor()
+            self.monitor = mon
+            self.daemon = MonitorDaemon(mon, lambda: self._router_obj,
+                                        engine=self._engine)
+            mon.start()
 
     # ------------------------------------------------------------- submit
     def range_query(self, q, r: float):
@@ -127,7 +155,9 @@ class ServingFrontend:
                 raise RuntimeError("frontend is closed")
             if len(self._pending) >= self._max_queue:
                 self._shed += 1
+                self._slo_miss += 1
                 _obs.count("frontend.shed")
+                _obs.count("frontend.slo_miss")
                 instant("frontend.shed", {"pending": len(self._pending)})
                 raise FrontendOverload(
                     f"queue full ({self._max_queue} pending)")
@@ -136,9 +166,27 @@ class ServingFrontend:
             self._pending.append(req)
             self._cv.notify_all()
         req.event.wait()
+        self._record_latency(time.monotonic() - req.t_in)
         if req.error is not None:
             raise req.error
         return req.result
+
+    def _record_latency(self, lat: float) -> None:
+        """Judge one completed request against the completion SLO (the
+        submitter's thread measures its own end-to-end latency: queue
+        wait + execution + wakeup)."""
+        ok = lat <= self._slo_target
+        with self._cv:
+            self._lat_hist.observe(lat)
+            if ok:
+                self._slo_ok += 1
+            else:
+                self._slo_miss += 1
+        if _obs.enabled():
+            reg = _obs.REGISTRY
+            reg.histogram("frontend.request_latency_s").observe(lat)
+            reg.counter(
+                "frontend.slo_ok" if ok else "frontend.slo_miss").inc()
 
     # ------------------------------------------------------------ batcher
     def _batch_loop(self) -> None:
@@ -250,6 +298,8 @@ class ServingFrontend:
             self._closed = True
             self._cv.notify_all()
         self._batcher.join(timeout)
+        if self.monitor is not None:
+            self.monitor.stop()
 
     def __enter__(self) -> "ServingFrontend":
         return self
@@ -265,11 +315,20 @@ class ServingFrontend:
         with self._cv:
             submitted, shed = self._submitted, self._shed
             batches, coalesced = self._batches, self._coalesced
+            slo_ok, slo_miss = self._slo_ok, self._slo_miss
         router = self._router_obj
         out = {
             "submitted": submitted,
             "shed": shed,
             "shed_rate": round(shed / max(submitted + shed, 1), 4),
+            "slo_target_ms": round(self._slo_target * 1e3, 3),
+            "slo_ok": slo_ok,
+            "slo_miss": slo_miss,
+            "slo_attained": round(slo_ok / max(slo_ok + slo_miss, 1), 4),
+            "latency_ms_p50": round(
+                self._lat_hist.percentile(50) * 1e3, 3),
+            "latency_ms_p99": round(
+                self._lat_hist.percentile(99) * 1e3, 3),
             "batches": batches,
             "batch_size_mean": round(self._size_hist.mean, 2)
             if batches else 0.0,

@@ -136,6 +136,20 @@ class ReplicaSet:
             self._owner = owner
         return owner.copy()
 
+    def set_ownership(self, owner: np.ndarray) -> None:
+        """Install an explicit (K,) ownership map.  Exactness never
+        depends on ownership, so any assignment is legal — this is how
+        demos and tests inject placement drift (stale ownership vs live
+        heat) for the monitor daemon to detect and repair."""
+        owner = np.asarray(owner, np.int64)
+        if owner.shape != (self.K,):
+            raise ValueError(f"owner must be shape ({self.K},)")
+        R = len(self.members)
+        if owner.size and (owner.min() < 0 or owner.max() >= R):
+            raise ValueError(f"owner ids must be in [0, {R})")
+        with self._own_lock:
+            self._owner = owner.copy()
+
     def load_stats(self) -> list:
         with self._own_lock:
             counts = np.bincount(self._owner, minlength=len(self.members))

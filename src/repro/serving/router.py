@@ -159,15 +159,44 @@ class PlanRouter:
         return [(idx, res) for (rep, idx), res in zip(groups, results)]
 
     # ---------------------------------------------------------- placement
+    def _heat(self) -> np.ndarray:
+        """The current per-cluster heat signal: page-cache access
+        counters when paged, routed-cluster counts when resident.
+        Always length ``replicas.K``: sharded snapshots pad K to a
+        device multiple while the store reports real clusters only, so
+        the tail pads with zero heat (padding clusters hold no data)."""
+        heat = self.replicas.cluster_heat()
+        if heat is None or not heat.any():
+            heat = self.routed_heat
+        heat = np.asarray(heat, np.float64).reshape(-1)
+        K = self.replicas.K
+        if len(heat) < K:
+            heat = np.pad(heat, (0, K - len(heat)))
+        return heat[:K]
+
+    def heat_skew(self) -> float:
+        """How badly ownership mismatches heat: max per-replica owned
+        heat over the per-replica mean (1.0 = balanced, R = one replica
+        owns everything hot).  Published as the ``router.heat_skew``
+        gauge — the heat-skew detector's input; the monitor daemon
+        calls this as its per-tick probe."""
+        heat = self._heat()
+        own = self.replicas.ownership()              # (R, K) bool
+        per = own.astype(np.float64) @ heat          # (R,)
+        total = per.sum()
+        if total <= 0 or len(per) <= 1:
+            skew = 1.0
+        else:
+            skew = float(per.max() / (total / len(per)))
+        _obs.set_gauge("router.heat_skew", skew)
+        return skew
+
     def rebalance(self) -> np.ndarray:
         """Fold the current heat signal into replica ownership: the page
         cache's per-cluster access counters when paged, the router's own
         routed-cluster counts when resident."""
         with span("router.rebalance"):
-            heat = self.replicas.cluster_heat()
-            if heat is None or not heat.any():
-                heat = self.routed_heat
-            moved = self.replicas.rebalance(heat)
+            moved = self.replicas.rebalance(self._heat())
         _obs.count("router.rebalances")
         return moved
 
