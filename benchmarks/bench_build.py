@@ -23,6 +23,7 @@ import time
 import numpy as np
 
 from repro.core import LIMSIndex, MetricSpace
+from repro.core.index import RETRAIN_AUTO_ROWS
 from repro.core.metrics import dist_one_to_many
 from repro.kernels.dispatch import default_interpret
 
@@ -85,6 +86,11 @@ def bench_one(n: int) -> dict:
     t_rh = _dirty_and_retrain(ih, X, "host", rng)
     t_rd_cold = _dirty_and_retrain(ih, X, "device", rng)
     t_rd = _dirty_and_retrain(ih, X, "device", rng)
+    # the "auto" router (core.index.RETRAIN_AUTO_ROWS crossover) — record
+    # where it sent this cluster size so the routing decision is tracked
+    # against the measured host/device times above
+    t_ra = _dirty_and_retrain(ih, X, "auto", rng)
+    auto_backend = ih.last_retrain_backend
 
     emit(f"build/host_n{n}", t_host * 1e6, f"s={t_host:.2f}")
     emit(f"build/device_n{n}", t_dev * 1e6,
@@ -94,6 +100,8 @@ def bench_one(n: int) -> dict:
     emit(f"retrain/device_n{n}", t_rd * 1e6,
          f"ms={t_rd*1e3:.1f} (cold={t_rd_cold*1e3:.0f}) "
          f"speedup={t_rh / t_rd:.2f}x")
+    emit(f"retrain/auto_n{n}", t_ra * 1e6,
+         f"ms={t_ra*1e3:.1f} routed={auto_backend}")
     return {
         "n": n, "d": D, **p, "interpret": default_interpret(),
         "build_host_s": round(t_host, 3),
@@ -105,6 +113,9 @@ def bench_one(n: int) -> dict:
         "retrain_device_ms": round(t_rd * 1e3, 2),
         "retrain_device_cold_ms": round(t_rd_cold * 1e3, 2),
         "retrain_speedup": round(t_rh / t_rd, 3),
+        "retrain_auto_ms": round(t_ra * 1e3, 2),
+        "retrain_auto_backend": auto_backend,
+        "retrain_auto_rows": RETRAIN_AUTO_ROWS,
     }
 
 

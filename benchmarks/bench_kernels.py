@@ -19,8 +19,12 @@ only come from measurement noise — the assertion uses fresh *paired*
 interleaved timings, not the tuner's own numbers.
 
 Also measured: the fused ``pdist_rankeval`` plan stage against its
-staged two-launch equivalent (same lane, both ways), and the per-stage
-roofline report (``repro.roofline.pipeline``) over a real snapshot.
+staged two-launch equivalent (same lane, both ways), the per-stage
+roofline report (``repro.roofline.pipeline``) over a real snapshot,
+and the filter-plane bytes-per-query ledger (DESIGN.md §13): the
+padded-f32 baseline against the compacted candidate gather and the
+certified bf16 plane, with the ≥ 2x traffic-reduction acceptance and
+the results of all three layouts asserted identical inline.
 
 Writes ``BENCH_kernels.json`` itself (structured payload; ``run.py``
 passes slug ``None`` for this section), and still prints the historical
@@ -134,6 +138,70 @@ def _fused_thunks(sh):
     return staged, fused
 
 
+def _filter_plane(reps: int) -> dict:
+    """Bytes the ball-filter stage streams per query under the three
+    layouts DESIGN.md §13 ships: padded f32 (baseline), compacted f32
+    gather, compacted bf16.  Bytes are the filter-plane rows the kernel
+    actually reads (slots x d x itemsize — the exact quantity the
+    compaction/precision work targets); wall time rides along, and all
+    three layouts must return bitwise-identical results."""
+    from repro.core import LIMSIndex, MetricSpace
+    from repro.core.executor import QueryExecutor
+    from repro.core.metrics import dist_one_to_many
+    from repro.core.snapshot import LIMSSnapshot
+
+    n, d, B = (3_000, 8, 32) if QUICK else (12_000, 8, 64)
+    rng = np.random.default_rng(5)
+    # a single blob k-center-clusters unevenly — the padded-slot slack
+    # the compacted gather exists for (cf. tests/test_layout.py)
+    X = rng.normal(size=(n, d))
+    ix = LIMSIndex(MetricSpace(X, "l2"), n_clusters=32, m=3, n_rings=16)
+    Q = X[rng.choice(n, B)] + rng.normal(0, 0.003, (B, d))
+    radii = np.array([float(np.quantile(dist_one_to_many(q, X, "l2"),
+                                        2e-3)) for q in Q])
+
+    def run(compact: str, dtype: str) -> tuple:
+        with _env(REPRO_COMPACT=compact, REPRO_ROWS_DTYPE=dtype):
+            snap = LIMSSnapshot.build(ix)
+            ex = QueryExecutor(snap)
+            res = ex.range_query_batch(Q, radii)
+            t = _time(lambda: ex.range_query_batch(Q, radii), reps)
+        itemsize = 2 if dtype in ("bf16", "f16") else 4
+        rows = (snap.n_slots if ex.last_compact is None
+                else ex.last_compact["bucket"])
+        return res, t, rows * d * itemsize / B, ex.last_compact, snap
+
+    base, t0, bpq0, _, snap = run("off", "off")
+    comp, t1, bpq1, lc1, _ = run("on", "off")
+    lowp, t2, bpq2, lc2, _ = run("on", "bf16")
+    for got in (comp, lowp):
+        for (ai, ad), (bi, bd) in zip(base, got):
+            assert np.array_equal(ai, bi) and np.array_equal(ad, bd), \
+                "filter-plane layouts must be bitwise-identical"
+
+    out = {
+        "n": n, "d": d, "batch": B, "n_slots": snap.n_slots,
+        "padded_f32": {"bytes_per_query": round(bpq0), "us": round(t0 * 1e6, 1)},
+        "compact_f32": {"bytes_per_query": round(bpq1), "us": round(t1 * 1e6, 1),
+                        "gather": lc1},
+        "compact_bf16": {"bytes_per_query": round(bpq2), "us": round(t2 * 1e6, 1),
+                         "gather": lc2},
+        "bytes_reduction": round(bpq0 / bpq2, 2),
+    }
+    emit("kernels/filter_plane_bytes", bpq2,
+         f"padded_f32={bpq0:.0f}B/q compact_bf16={bpq2:.0f}B/q "
+         f"reduction={out['bytes_reduction']}x")
+    # acceptance: the compacted bf16 plane moves >= 2x fewer bytes per
+    # query than the padded f32 baseline.  This is layout arithmetic,
+    # not a timing — bf16 alone halves traffic, the gather stacks on
+    # top whenever the union clears the payoff bound — so it holds on
+    # every backend and at the QUICK shapes too.
+    assert out["bytes_reduction"] >= 2.0, (
+        f"filter plane bytes/query reduced only "
+        f"{out['bytes_reduction']}x: {out}")
+    return out
+
+
 def main() -> None:
     sh = _SHAPES[QUICK]
     reps = 2 if QUICK else 5
@@ -213,10 +281,24 @@ def main() -> None:
          f"staged={fused_cmp['xla']['staged_us']} "
          f"speedup={fused_cmp['xla']['speedup']}x")
 
+    # ---- filter-plane bytes per query (compaction + bf16) -------------
+    payload["filter_plane"] = _filter_plane(reps)
+
     # ---- roofline over the real query pipeline ------------------------
     from repro.roofline.pipeline import pipeline_report, render
     payload["roofline"] = pipeline_report(quick=QUICK)
     print(render(payload["roofline"]))
+    # acceptance: the query-blocked pdist tiling holds the stage at
+    # >= 55% of its memory roof at the pipeline shapes (up from ~39%
+    # with the point-major-only tiles).  CPU xla lane, full shapes only
+    # — the same gate as the autotuner assertion above.
+    if jax.default_backend() == "cpu" and not QUICK:
+        pd_util = next(s["roofline_utilization"]
+                       for s in payload["roofline"]["stages"]
+                       if s["stage"] == "pdist")
+        assert pd_util >= 0.55, (
+            f"query-blocked pdist at {pd_util:.0%} of the memory roof "
+            f"(want >= 55%)")
 
     # ---- historical ref-path rows (trajectory continuity) -------------
     key = jax.random.PRNGKey(0)

@@ -7,11 +7,19 @@ schedule, derived purely from snapshot metadata — and this module
 executes it through one of two backends:
 
   * ``_ResidentBackend`` — the in-memory kernel pipeline.  Range applies
-    the fused L2-ball prefilter to the plan's device mask; kNN runs the
-    *entire* growing-radius schedule inside one compiled
-    ``lax.while_loop`` with per-query done flags, so a batch costs O(1)
-    host syncs no matter how many rounds it takes (the counter is
-    recorded in ``last_knn`` and asserted in tests).
+    the fused L2-ball prefilter to the plan's device mask — by default
+    (``REPRO_COMPACT=on``) over the plan's *compacted candidate gather*:
+    the union certified candidate rows, gathered once into a
+    power-of-two bucket, so filter bytes scale with TriPrune survivors
+    instead of padded slots (DESIGN.md §13).  kNN runs the *entire*
+    growing-radius schedule inside one compiled ``lax.while_loop`` with
+    per-query done flags, so a batch costs O(1) host syncs no matter how
+    many rounds it takes (the counter is recorded in ``last_knn`` and
+    asserted in tests).  Both filters read the snapshot's *filter plane*
+    (``REPRO_ROWS_DTYPE``: optionally bf16/f16 rows whose certified
+    quantization margin widens ball tests and tightens certifications),
+    and the exact host refinement keeps results bitwise identical either
+    way.
   * ``_PagedBackend`` — the storage tier.  The plan's masks become
     IO-batched page runs; because round t+1's radius is known from the
     schedule before round t's refinement finishes, the backend can hand
@@ -58,6 +66,7 @@ from jax.experimental.shard_map import shard_map
 
 from .. import env
 from ..kernels import ops
+from ..kernels.dispatch import compact_enabled
 from ..obs import registry as _obs
 from ..obs.profile import QueryProfile, record_profile
 from ..obs.trace import span
@@ -74,6 +83,14 @@ from .snapshot import _DEVICE_FIELDS, LIMSSnapshot
 _FAR = np.float32(1e30)
 
 
+def _bucket_size(n: int, min_rows: int = 128) -> int:
+    """Next power-of-two row bucket (≥ ``min_rows``) for ``n`` rows —
+    the one bucketing policy both gather paths (paged IO and the
+    resident compacted gather) launch kernels at, capping the number of
+    executable shapes at log₂(P)."""
+    return max(min_rows, 1 << max(n - 1, 1).bit_length())
+
+
 def _pad_bucket(rows32: np.ndarray, min_rows: int = 128) -> np.ndarray:
     """Pad gathered rows to the next power-of-two bucket (≥ ``min_rows``).
 
@@ -84,7 +101,7 @@ def _pad_bucket(rows32: np.ndarray, min_rows: int = 128) -> np.ndarray:
     so they can never enter any ball, and callers slice kernel outputs
     back to the true count (per-pair math is unaffected by padding)."""
     n = rows32.shape[0]
-    bucket = max(min_rows, 1 << max(n - 1, 1).bit_length())
+    bucket = _bucket_size(n, min_rows)
     if bucket <= n:
         return rows32
     pad = np.full((bucket - n, rows32.shape[1]), _FAR, np.float32)
@@ -120,7 +137,7 @@ def _smallest_k(dm, k: int):
 
 
 
-def _knn_rounds(qf, d2, kth0, r0, snap, n_rings, k_eff, max_rounds,
+def _knn_rounds(qf, d2, kth0, r0, eps, snap, n_rings, k_eff, max_rounds,
                 count_sum, kth_select):
     """The entire certified growing-radius schedule as one
     ``lax.while_loop`` — the ONE copy of the loop both the single-device
@@ -143,6 +160,14 @@ def _knn_rounds(qf, d2, kth0, r0, snap, n_rings, k_eff, max_rounds,
     Anything the schedule never certifies falls back to the exact full
     scan of (locally) valid slots.  Returns (final mask, rounds used),
     both shard-local shapes under ``shard_map``.
+
+    ``eps`` is the certified quantization margin of whatever row plane
+    produced ``d2`` (``snap.filter_rows()``; 0.0 for the exact f32
+    rows): per-pair filter distances satisfy |d_lp − d| ≤ eps, so the
+    ball test widens by +eps (no true candidate can be cut) and the
+    k-th-ball certification tightens by −eps (the true k-th distance is
+    at most the filtered one plus eps).  At eps = 0.0 both adjustments
+    are the f32 identity x ± 0.0 — bit-for-bit the pre-lp loop.
     """
     valid = snap.valid.reshape(-1)
     B = qf.shape[0]
@@ -157,12 +182,12 @@ def _knn_rounds(qf, d2, kth0, r0, snap, n_rings, k_eff, max_rounds,
     def body(st):
         done, r, rounds, final = st
         cand = plan_arrays(qf, r, snap, n_rings)[0]
-        ball = d2 <= ((r * (1.0 + _R_REL) + _BALL_ABS) ** 2)[:, None]
+        ball = d2 <= ((r * (1.0 + _R_REL) + _BALL_ABS + eps) ** 2)[:, None]
         candb = cand & ball
         cnt = count_sum(candb)
         dm = jnp.where(candb, d2, jnp.inf)
         kth = jnp.sqrt(jnp.maximum(kth_select(dm), 0.0))
-        ok = (cnt >= k_eff) & (kth <= r * (1.0 - _R_REL) - _BALL_ABS)
+        ok = (cnt >= k_eff) & (kth <= r * (1.0 - _R_REL) - _BALL_ABS - eps)
         newly = ok & ~done
         final = jnp.where(newly[:, None], candb, final)
         done = done | newly
@@ -178,19 +203,43 @@ def _knn_rounds(qf, d2, kth0, r0, snap, n_rings, k_eff, max_rounds,
 
 @functools.partial(jax.jit,
                    static_argnames=("n_rings", "k_eff", "max_rounds"))
-def _knn_loop_single(qf, d2, kth0, r0, *arrays, n_rings, k_eff,
+def _knn_loop_single(qf, d2, kth0, r0, eps, *arrays, n_rings, k_eff,
                      max_rounds):
     """Single-device compiled kNN rounds: (final mask, rounds used).
 
-    ``d2``/``kth0`` (the full valid-masked distance matrix and the f32
-    k-th distance) arrive precomputed from the *eager* kernel path —
-    XLA CPU's eager TopK dispatch is ~40× its jitted lowering, and the
-    seed is loop-invariant anyway, so only per-round work compiles."""
+    ``d2``/``kth0`` (the full valid-masked filter-plane distance matrix
+    and the f32 k-th distance) arrive precomputed from the *eager*
+    kernel path — XLA CPU's eager TopK dispatch is ~40× its jitted
+    lowering, and the seed is loop-invariant anyway, so only per-round
+    work compiles.  ``eps`` is the plane's certified margin (see
+    ``_knn_rounds``; 0.0 on the exact f32 plane)."""
     snap = SimpleNamespace(**dict(zip(_DEVICE_FIELDS, arrays)))
     return _knn_rounds(
-        qf, d2, kth0, r0, snap, n_rings, k_eff, max_rounds,
+        qf, d2, kth0, r0, eps, snap, n_rings, k_eff, max_rounds,
         count_sum=lambda candb: jnp.sum(candb, axis=1),
         kth_select=lambda dm: _smallest_k(dm, k_eff)[:, -1])
+
+
+@jax.jit
+def _knn_round_masks(d2, cand, rf, eps):
+    """The fused wide part of one host-rounds round: certified ball
+    mask, candidate count, and the masked distance matrix in a single
+    launch.
+
+    The eager spelling streams the (B, n_slots) matrix once per op —
+    ball, candb, cnt, dm are four separate passes; fused, XLA reads
+    ``d2``/``cand`` once and writes ``candb``/``dm`` once.  The k-th
+    selection stays *outside*: XLA-CPU's jitted TopK lowering is an
+    order of magnitude slower than its eager dispatch (the same cliff
+    that routes REPRO_KNN_DRIVER=auto to this driver), so the round
+    fuses everything except TopK.  Same jnp graph as the eager version
+    (elementwise math, exact bool-sum reduction) so the outputs are
+    bit-identical — a bytes-moved optimization, not a math change."""
+    ball = d2 <= ((rf * (1.0 + _R_REL) + _BALL_ABS + eps) ** 2)[:, None]
+    candb = cand & ball
+    cnt = jnp.sum(candb, axis=1)
+    dm = jnp.where(candb, d2, jnp.inf)
+    return candb, cnt, dm
 
 
 # ---------------------------------------------------------------------------
@@ -231,9 +280,53 @@ class _ResidentBackend:
     def range_hits(self, plan: CandidatePlan) -> np.ndarray:
         ex = self.ex
         rf = jnp.asarray(plan.radii, jnp.float32)
+        if compact_enabled() and getattr(ex, "n_shards", 1) <= 1:
+            slots = plan.compact_slots()
+            if slots is not None:
+                return self._range_hits_compact(plan, rf, slots)
+        ex.last_compact = None
         hits = plan.mask_dev & ex._ball_filter(plan.qf, rf)
         ex._count_sync()
         return np.asarray(hits)
+
+    def _range_hits_compact(self, plan: CandidatePlan, rf,
+                            slots: np.ndarray) -> np.ndarray:
+        """Ball prefilter over the plan's compacted candidate gather
+        (DESIGN.md §13): the union candidate rows are gathered from the
+        filter plane once into a power-of-two bucket and only the dense
+        array streams through ``range_filter`` — filter bytes scale
+        with surviving candidates, not padded slots.
+
+        Bit-identical to the full-array path: the gathered rows are the
+        very device rows the full filter would stream, per-pair kernel
+        math is independent of which rows share a launch, bucket
+        padding sits at ~1e30 outside every ball, and slots outside the
+        union are non-candidates for the whole batch in both paths
+        (pinned by tests)."""
+        ex = self.ex
+        s = ex.snap
+        cand = plan.mask
+        hits = np.zeros_like(cand)
+        bucket = 0
+        if slots.size:
+            frows, eps = s.filter_rows()
+            sub = frows.reshape(s.n_slots, s.d)[jnp.asarray(slots)]
+            bucket = _bucket_size(int(slots.size))
+            if bucket > slots.size:
+                sub = jnp.pad(sub, ((0, bucket - slots.size), (0, 0)),
+                              constant_values=_FAR)
+            ball, _ = ops.range_filter(
+                plan.qf, sub, rf * (1.0 + _R_REL) + _BALL_ABS + eps)
+            ball = np.asarray(ball, bool)[:, :slots.size]
+            ex._count_sync()
+            hits[:, slots] = cand[:, slots] & ball
+        ex.last_compact = {"slots": int(slots.size), "bucket": int(bucket),
+                           "n_slots": int(s.n_slots)}
+        _obs.count("executor.compact_batches")
+        if s.n_slots:
+            _obs.observe("executor.compact_frac",
+                         slots.size / float(s.n_slots))
+        return hits
 
     def knn_candidates(self, plan: CandidatePlan):
         ex = self.ex
@@ -260,7 +353,7 @@ class _ResidentBackend:
         s = ex.snap
         qf = plan.qf
         k_eff = plan.k
-        d2 = ex._sq_dists(qf)
+        d2, eps = ex._filter_dists(qf)
         kth0 = jnp.sqrt(jnp.maximum(
             -jax.lax.top_k(-d2, k_eff)[0][:, -1], 0.0))
         r0 = jnp.asarray(plan.radii, jnp.float32)
@@ -276,14 +369,16 @@ class _ResidentBackend:
             rounds = t + 1
             rf = jnp.asarray(r, jnp.float32)
             cand = ex._candidate_mask(qf, rf)
-            ball = d2 <= ((rf * (1.0 + _R_REL) + _BALL_ABS) ** 2)[:, None]
-            candb = cand & ball
-            cnt = jnp.sum(candb, axis=1)
-            dm = jnp.where(candb, d2, jnp.inf)
+            # same ±eps adjustments as _knn_rounds: widen the ball so
+            # the lp plane can't cut a true candidate, tighten the
+            # certification by the margin the filtered k-th may be off
+            # (fused wide passes; TopK stays eager — see _knn_round_masks)
+            candb, cnt, dm = _knn_round_masks(d2, cand, rf,
+                                              jnp.float32(eps))
             kth = jnp.sqrt(jnp.maximum(
                 -jax.lax.top_k(-dm, k_eff)[0][:, -1], 0.0))
             ok = np.asarray((cnt >= k_eff) &
-                            (kth <= rf * (1.0 - _R_REL) - _BALL_ABS))
+                            (kth <= rf * (1.0 - _R_REL) - _BALL_ABS - eps))
             ex._count_sync()
             newly = ok & ~done
             if newly.any():
@@ -507,6 +602,10 @@ class QueryExecutor:
             if snapshot.store is not None else _ResidentBackend(self)
         # IO summary of the most recent store-mode batch (None otherwise)
         self.last_io: dict | None = None
+        # {slots, bucket, n_slots} of the most recent resident range
+        # batch that took the compacted-gather path (None when the full
+        # padded array streamed; last-writer-wins like last_io)
+        self.last_compact: dict | None = None
         # {backend, rounds, host_syncs, driver} of the most recent kNN
         # batch (last-writer-wins under concurrent batches, like last_io)
         self.last_knn: dict | None = None
@@ -549,10 +648,16 @@ class QueryExecutor:
         return self._plan_arrays(qf, rf)[0]
 
     def _ball_filter(self, qf: jax.Array, rf: jax.Array) -> jax.Array:
-        """(B, P) bool — fused L2-ball prefilter over resident rows."""
+        """(B, P) bool — fused L2-ball prefilter over the snapshot's
+        *filter plane*: the reduced-precision row copy when
+        ``REPRO_ROWS_DTYPE`` enables one (radius widened by its
+        certified eps so quantization can never cut a true result), the
+        exact f32 rows with eps 0.0 — then bit-for-bit the pre-lp
+        filter — otherwise."""
         s = self.snap
-        ball, _ = ops.range_filter(qf, s.rows.reshape(s.n_slots, s.d),
-                                   rf * (1.0 + _R_REL) + _BALL_ABS)
+        frows, eps = s.filter_rows()
+        ball, _ = ops.range_filter(qf, frows.reshape(s.n_slots, s.d),
+                                   rf * (1.0 + _R_REL) + _BALL_ABS + eps)
         return ball.astype(bool)
 
     def _sq_dists(self, qf: jax.Array) -> jax.Array:
@@ -565,18 +670,37 @@ class QueryExecutor:
         d2 = ops.pdist(qf, s.rows.reshape(s.n_slots, s.d))
         return jnp.where(s.valid.reshape(-1)[None], d2, jnp.inf)
 
+    def _filter_dists(self, qf: jax.Array) -> tuple[jax.Array, float]:
+        """(B, P) f32 squared distances on the filter plane, plus the
+        plane's certified quantization margin eps.
+
+        With the lp plane off this is :meth:`_sq_dists` bit-for-bit
+        (eps 0.0).  With it on, per-pair distances satisfy
+        |d_lp − d| ≤ eps (metric-norm bound on the row rounding,
+        computed at snapshot build), so callers widen ball tests by
+        +eps and tighten certifications by −eps; the exact host
+        refinement then keeps final results bitwise identical."""
+        s = self.snap
+        if s.store is not None:
+            raise RuntimeError(
+                "store-backed executor never scans every slot; the kNN "
+                "driver routes through the paged backend")
+        frows, eps = s.filter_rows()
+        d2 = ops.pdist(qf, frows.reshape(s.n_slots, s.d))
+        return jnp.where(s.valid.reshape(-1)[None], d2, jnp.inf), eps
+
     def _knn_device_loop(self, qf, r0, k_eff: int, max_rounds: int):
         """(final mask, rounds) — the kNN schedule as one executable.
 
-        The loop-invariant pieces (full distance matrix, seed k-th
-        distance) run on the eager kernel path first; only the rounds
-        themselves compile.  No extra host syncs — eager results stay
-        device-resident and feed the jitted loop directly."""
-        d2 = self._sq_dists(qf)
+        The loop-invariant pieces (filter-plane distance matrix, seed
+        k-th distance) run on the eager kernel path first; only the
+        rounds themselves compile.  No extra host syncs — eager results
+        stay device-resident and feed the jitted loop directly."""
+        d2, eps = self._filter_dists(qf)
         kth0 = jnp.sqrt(jnp.maximum(
             -jax.lax.top_k(-d2, k_eff)[0][:, -1], 0.0))
         return _knn_loop_single(
-            qf, d2, kth0, r0,
+            qf, d2, kth0, r0, jnp.float32(eps),
             *(getattr(self.snap, f) for f in _DEVICE_FIELDS),
             n_rings=self.snap.n_rings, k_eff=k_eff, max_rounds=max_rounds)
 
@@ -993,8 +1117,12 @@ def _sharded_knn_loop(mesh: Mesh, axis: str, n_rings: int, specs: tuple,
             return -jax.lax.top_k(-allk, k_eff)[0][:, -1]
 
         kth0 = jnp.sqrt(jnp.maximum(merged_kth(d2), 0.0))
+        # the sharded loop always filters on the exact f32 rows — the
+        # lp plane is aux state the shard_map pipeline never ships, and
+        # cross-shard reductions must agree on one plane — so eps is 0
         return _knn_rounds(
-            qf, d2, kth0, r0, snap, n_rings, k_eff, max_rounds,
+            qf, d2, kth0, r0, jnp.float32(0.0), snap, n_rings, k_eff,
+            max_rounds,
             count_sum=lambda candb: jax.lax.psum(
                 jnp.sum(candb, axis=1), axis),
             kth_select=merged_kth)

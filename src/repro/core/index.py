@@ -29,6 +29,14 @@ from .paging import DEFAULT_PAGE_BYTES, PageStore
 from .pivots import fft_pivots
 from .rankmodel import PolyRankModel, SearchStats, binary_search, exponential_search
 
+# retrain ``backend="auto"`` crossover: below this many member rows the
+# host numpy rebuild beats the device builder's per-launch dispatch
+# overhead (BENCH_build.json pins host ahead at ~125 and ~500
+# rows/cluster on CPU; the compiled-lane crossover is re-measured by
+# ``benchmarks/bench_build.py`` and recorded next to this constant's
+# routing decisions)
+RETRAIN_AUTO_ROWS = 4096
+
 
 @dataclass
 class QueryStats:
@@ -118,6 +126,9 @@ class LIMSIndex:
         self.learned = learned
         self.max_intervals = max_intervals
         self.backend = backend
+        # backend the most recent retrain_cluster actually ran with
+        # (records "auto"'s routing decision; None before any retrain)
+        self.last_retrain_backend: str | None = None
         n = space.n
 
         if n_clusters is None:
@@ -485,10 +496,17 @@ class LIMSIndex:
         through the device builder (``repro.build.retrain_device``); the
         pivot-distance matrix, mapping and extents are recomputed in
         exact f64 either way, so results stay exact (DESIGN.md §6).
+        ``"auto"`` routes on the member row count: the host numpy
+        rebuild wins below ``RETRAIN_AUTO_ROWS`` rows, where device
+        dispatch overhead dominates (the crossover is measured in
+        ``benchmarks/bench_build.py`` → ``BENCH_build.json``); custom /
+        non-vector metrics and the interpret kernel lane always take
+        the host path (the device builder can't serve them / only costs
+        there).  The chosen backend lands in ``last_retrain_backend``.
         ``None`` uses the backend the index was built with.
         """
         backend = self.backend if backend is None else backend
-        if backend not in ("host", "device"):
+        if backend not in ("host", "device", "auto"):
             raise ValueError(f"unknown build backend {backend!r}")
         ci = self.clusters[c]
         live = [int(g) for g in ci.store_ids if g not in self.tombstones]
@@ -504,6 +522,13 @@ class LIMSIndex:
                 all_ids.append(gid)
         if not all_rows:
             return
+        if backend == "auto":
+            from ..kernels.dispatch import default_interpret
+            device_ok = (self.space._custom is None and self.space.is_vector
+                         and not default_interpret())
+            backend = "device" if device_ok and \
+                len(all_rows) >= RETRAIN_AUTO_ROWS else "host"
+        self.last_retrain_backend = backend
         sub = MetricSpace(np.stack(all_rows), self.space.metric,
                           self.space._custom)
         deg = self.degree if self.learned else 1

@@ -61,6 +61,11 @@ _BALL_ABS = 1e-3    # absolute inflation for the distance-ball prefilter
 # seed-radius inflation: pivot/k-th distances are f32, the schedule base
 # is f64 — the same margin both pre-refactor kNN drivers applied
 _SEED_REL = 1e-3
+# compacted-gather payoff bound: when the union candidate set exceeds
+# this fraction of the slot array, gathering survivors moves more bytes
+# than the full-array filter saves (the power-of-two bucket would cover
+# most of the slots anyway) and the plan reports "don't compact"
+_COMPACT_MAX_FRAC = 0.5
 
 
 def plan_arrays(qf, rf, snap, n_rings: int, fused: bool | None = None):
@@ -151,6 +156,9 @@ class CandidatePlan:
     _dev: tuple | None = field(repr=False, default=None)
     _mask_np: np.ndarray | None = field(repr=False, default=None)
     _routing_np: np.ndarray | None = field(repr=False, default=None)
+    # cached compacted-gather decision: None = not evaluated yet,
+    # (slots,) = dense gather indices, (None,) = union too large to pay
+    _compact: tuple | None = field(repr=False, default=None)
     # page arrays the paged backend pinned for this plan's execution;
     # drained by the executor's release (finally) — never shared across
     # plans, so a router subset starts with its own empty ledger
@@ -202,6 +210,31 @@ class CandidatePlan:
             self._routing_np = np.asarray(self.routing_dev)
             self._planner.ex._count_sync()
         return self._routing_np
+
+    def compact_slots(self) -> np.ndarray | None:
+        """The plan's compacted row-index gather: sorted flat slot ids
+        of the *union* certified candidate set at round-0 radii, or
+        None when compaction cannot pay (union > ``_COMPACT_MAX_FRAC``
+        of the slots — streaming the full padded array is cheaper than
+        gather + dense filter would save).
+
+        This is the memory-roofline half of the plan (DESIGN.md §13):
+        the resident backend gathers exactly these rows once into a
+        power-of-two bucket (the paged path's compile-churn bucketing)
+        and runs the ball prefilter over the dense array, so filter
+        bytes scale with TriPrune's surviving candidates instead of
+        with the padded slot count.  Certification is untouched — the
+        union is read off the already-certified mask, every
+        non-listed slot is a non-candidate for every query in the
+        batch, and per-pair kernel math is independent of which rows
+        share a launch.  Cached with the host mask it derives from.
+        """
+        if self._compact is None:
+            mask = self.mask
+            slots = np.nonzero(mask.any(axis=0))[0]
+            limit = int(mask.shape[1] * _COMPACT_MAX_FRAC)
+            self._compact = (None,) if slots.size > limit else (slots,)
+        return self._compact[0]
 
     def subset(self, idx: np.ndarray, planner: "Planner | None" = None,
                device=None) -> "CandidatePlan":

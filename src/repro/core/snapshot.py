@@ -33,6 +33,19 @@ Host-side refinement data (``gids_np``, ``rows_np`` in f64, ``valid_np``)
 rides along as aux so the final exact-distance refinement never round-trips
 through f32 device memory.
 
+Two-plane row layout (DESIGN.md §13): next to the f32 ``rows`` plane the
+snapshot can carry an optional reduced-precision copy ``rows_lp``
+(bf16/f16, ``REPRO_ROWS_DTYPE``, default off) used *only* for first-pass
+distance filtering.  Its certified companion ``lp_eps`` is the exact
+quantization margin max_x ‖x_f32 − x_lp‖ (computed in f64 at build): by
+the triangle inequality every low-precision distance satisfies
+|d_lp(q, x) − d(q, x)| ≤ lp_eps, so a filter radius widened by lp_eps
+admits every true result and a kNN certification radius tightened by
+lp_eps never certifies early — the same certified-superset pattern as
+the rank-error bound E below, with the exact f32/f64 refinement keeping
+final results bit-identical.  With the plane off, ``lp_eps = 0.0`` and
+every threshold expression reduces to today's bitwise-identical form.
+
 Exactness with learned models on device: the host corrects model error
 with exponential search; fixed-shape device code cannot branch per value,
 so the snapshot instead *certifies* a per-(cluster, pivot) rank-error
@@ -59,6 +72,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels import ops
+from ..kernels.dispatch import rows_dtype
 from ..storage import (DEFAULT_CACHE_PAGES, DEFAULT_PAGE_BYTES, PagedStore,
                        StoreView, load_meta, spill_rows, storage_mode)
 from .index import LIMSIndex
@@ -71,9 +85,13 @@ _DEVICE_FIELDS = (
     "valid", "in_ring", "always",
     "coef", "model_lo", "model_hi", "model_n", "rank_err",
 )
-# static / host-side fields (pytree aux)
+# static / host-side fields (pytree aux; the optional low-precision
+# plane rides as aux, not a child — its presence must not change the
+# pytree structure the sharded executor's cached shard_map builders key
+# on, and the sharded/paged paths never read it)
 _AUX_FIELDS = ("K", "m", "n_rings", "n_max", "live",
-               "gids_np", "rows_np", "valid_np", "store")
+               "gids_np", "rows_np", "valid_np", "store",
+               "rows_lp", "lp_eps")
 # everything spilled to the store's metadata file (rows go to pages.bin)
 _SPILL_FIELDS = tuple(f for f in _DEVICE_FIELDS if f != "rows")
 
@@ -114,6 +132,11 @@ class LIMSSnapshot:
     # bound to THIS snapshot's generation layout, so a later writeback
     # can never remap an in-flight batch's slots)
     store: StoreView | None = None
+    # reduced-precision filter plane (DESIGN.md §13): bf16/f16 copy of
+    # ``rows`` plus its certified quantization margin; None/0.0 when
+    # disabled (``REPRO_ROWS_DTYPE``, the default)
+    rows_lp: jax.Array | None = None
+    lp_eps: float = 0.0
 
     # ------------------------------------------------------------- pytree
     def tree_flatten(self):
@@ -134,6 +157,16 @@ class LIMSSnapshot:
     @property
     def d(self) -> int:
         return self.rows.shape[-1]
+
+    def filter_rows(self) -> tuple[jax.Array, float]:
+        """(row plane, certified margin) for first-pass distance
+        filtering: the low-precision plane with its quantization margin
+        when present, else the f32 plane with margin 0.0 — callers add
+        the margin to filter radii unconditionally (+0.0 is an f32/f64
+        identity, so the disabled path stays bitwise identical)."""
+        if self.rows_lp is not None:
+            return self.rows_lp, self.lp_eps
+        return self.rows, 0.0
 
     # -------------------------------------------------------------- build
     @classmethod
@@ -175,10 +208,13 @@ class LIMSSnapshot:
                 gids[k, n:n + nb] = ci.buf_ids
                 valid[k, n:n + nb] = [g not in dead for g in ci.buf_ids]
         coef, lo, hi, n_model, err = _certified_rank_table(index)
+        rows_dev = jnp.asarray(rows)
+        rows_lp, lp_eps = _lp_plane(rows_dev)
         return cls(
             K=K, m=m, n_rings=index.n_rings, n_max=n_max,
             live=int(valid.sum()),
-            rows=jnp.asarray(rows),
+            rows_lp=rows_lp, lp_eps=lp_eps,
+            rows=rows_dev,
             rids=jnp.asarray(rids),
             pivots=jnp.asarray(pivots),
             dmin=jnp.asarray(dmin),
@@ -220,8 +256,12 @@ class LIMSSnapshot:
             return jnp.pad(a, widths, constant_values=fill)
 
         nm = self.n_max
+        lp = self.rows_lp
+        if lp is not None:
+            # zero padding quantizes exactly, so the margin is unchanged
+            lp = jnp.pad(lp, [(0, pk), (0, 0), (0, 0)])
         return replace(
-            self, K=K_new,
+            self, K=K_new, rows_lp=lp,
             rows=dev("rows", 0.0), rids=dev("rids", -1),
             pivots=dev("pivots", 0.0),
             dmin=dev("dmin", 0.0), dmax=dev("dmax", 0.0),
@@ -273,7 +313,8 @@ class LIMSSnapshot:
             store = store.view()
         return replace(
             self, rows=jnp.zeros((self.K, 0, self.d), jnp.float32),
-            rows_np=np.zeros((0, self.d), np.float64), store=store)
+            rows_np=np.zeros((0, self.d), np.float64), store=store,
+            rows_lp=None, lp_eps=0.0)
 
     @classmethod
     def load(cls, path: str, store: "bool | PagedStore | None" = None,
@@ -307,13 +348,16 @@ class LIMSSnapshot:
         if ps is not None:
             rows = jnp.zeros((K, 0, d), jnp.float32)
             rows_np = np.zeros((0, d), np.float64)
+            rows_lp, lp_eps = None, 0.0
         else:
             reader = PagedStore(path, cache_pages=0)
             rows64 = np.stack([reader.read_cluster(k) for k in range(K)])
             rows = jnp.asarray(rows64.astype(np.float32))
             rows_np = rows64.reshape(K * n_max, d)
+            rows_lp, lp_eps = _lp_plane(rows)
         return cls(K=K, m=m, n_rings=n_rings, n_max=n_max, live=live,
                    rows=rows, rows_np=rows_np,
+                   rows_lp=rows_lp, lp_eps=lp_eps,
                    gids_np=np.asarray(meta["gids_np"], np.int64),
                    valid_np=np.asarray(meta["valid_np"], bool),
                    store=ps, **kw)
@@ -342,6 +386,44 @@ def maybe_paged(snap: "LIMSSnapshot", path: str | None = None,
 
 jax.tree_util.register_pytree_node(
     LIMSSnapshot, LIMSSnapshot.tree_flatten, LIMSSnapshot.tree_unflatten)
+
+
+_LP_DTYPES = {"bf16": jnp.bfloat16, "f16": jnp.float16}
+
+
+def lp_quant_eps(rows, lp, metric: str = "l2") -> float:
+    """Certified quantization margin of a low-precision row plane.
+
+    ``max_x ‖x − x̃‖`` over rows, computed exactly in f64 — by the
+    triangle inequality ``|d(q, x̃) − d(q, x)| ≤ ‖x − x̃‖`` for every
+    query ``q`` under any norm-induced metric, so widening a filter
+    radius by this margin makes the low-precision ball test a certified
+    superset of the exact one (the ε analogue of the rank bound E:
+    DESIGN.md §13 vs §3)."""
+    delta = np.abs(np.asarray(rows).astype(np.float64)
+                   - np.asarray(lp).astype(np.float64))
+    if delta.size == 0:
+        return 0.0
+    delta = delta.reshape(-1, delta.shape[-1])
+    if metric in ("l2", "sql2"):
+        per = np.sqrt(np.sum(delta * delta, axis=-1))
+    elif metric == "l1":
+        per = np.sum(delta, axis=-1)
+    elif metric == "linf":
+        per = np.max(delta, axis=-1)
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    return float(per.max())
+
+
+def _lp_plane(rows: jax.Array) -> tuple[jax.Array | None, float]:
+    """(rows_lp, lp_eps) under the ``REPRO_ROWS_DTYPE`` policy — None /
+    0.0 when the plane is off (the default)."""
+    dt = rows_dtype()
+    if dt is None or rows.size == 0:
+        return None, 0.0
+    lp = rows.astype(_LP_DTYPES[dt])
+    return lp, lp_quant_eps(rows, lp, "l2")
 
 
 def _certified_rank_table(index: LIMSIndex):
@@ -393,4 +475,4 @@ def _certified_rank_table(index: LIMSIndex):
     return coef, lo, hi, n_model, err
 
 
-__all__ = ["LIMSSnapshot", "maybe_paged"]
+__all__ = ["LIMSSnapshot", "maybe_paged", "lp_quant_eps"]

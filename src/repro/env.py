@@ -57,6 +57,20 @@ _KNOBS = (
     Knob("REPRO_CACHE_PIN",
          ("", "on", "off", "0", "1", "no", "yes"), "on",
          "Schedule-aware page-cache pinning (off/0/no disables)."),
+    Knob("REPRO_COMPACT",
+         ("", "on", "off"), "on",
+         "Compacted candidate gather on the resident range path: gather "
+         "the certified candidate rows once into a dense power-of-two "
+         "bucket and filter only those (on, default), or stream the "
+         "full padded slot array through the kernels (off)."),
+    Knob("REPRO_ROWS_DTYPE",
+         ("", "off", "f32", "bf16", "f16"), "off",
+         "Reduced-precision filter plane: keep an extra bf16/f16 copy "
+         "of the snapshot row plane for first-pass distance filtering, "
+         "with a certified rounding-error margin widening the filter "
+         "radius so no true result can be cut (exact f32/f64 refinement "
+         "keeps final results bitwise identical). off/f32 (default) "
+         "disables the extra plane."),
     Knob("REPRO_KNN_DRIVER",
          ("", "auto", "loop", "rounds"), "auto",
          "kNN driver: loop (device lax.while_loop), rounds (host-stepped "

@@ -10,11 +10,17 @@ module replaces them on the compiled lanes with a measured table:
   covers a whole shape bucket, and because ``ops`` pads operands to tile
   multiples anyway, tuning at the bucket shape measures the same
   computation the serving path runs.
-* **Value**: ``{"tiles": {"bq": …, "bp": …}, "us": best_time, "v": 1}``.
+* **Value**: ``{"tiles": {"bq": …, "bp": …, "qb": …}, "us": best_time,
+  "static_us": static_time, "v": 2}``.
 * **Search**: a small per-backend candidate grid (always containing the
-  static-heuristic tile, so the tuned choice is never worse than the
-  heuristic *on the tuning measurements*), each candidate timed via a
-  compiled micro-run (warm-up call to compile, then best-of-N).
+  static-heuristic tile), each candidate timed via a compiled micro-run
+  (warm-up call to compile, then best-of-N).  The winner is then
+  *paired-timed* against the static heuristic and accepted only when it
+  beats it by more than a noise margin — a near-tie would otherwise pin
+  one noisy measurement into the cache forever, and a regression (a
+  "tuned" tile slower than the heuristic at serving time) could ride
+  along.  ``revalidate()`` re-measures cached entries whose recorded
+  win may have evaporated (new kernel code, different machine load).
 * **Persistence**: repo-shipped defaults (``tuning_defaults.json`` next
   to this file) overlaid by a user cache (``~/.cache/repro-tune.json``
   or ``$REPRO_TUNE_CACHE``), written atomically (temp + rename).
@@ -42,16 +48,21 @@ import numpy as np
 from .. import env
 from . import dispatch
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2   # v2: query×points kernels gained the "qb" sub-block
 _DEFAULTS_PATH = Path(__file__).parent / "tuning_defaults.json"
+
+# tuned entries must beat the static heuristic by this fraction on a
+# paired best-of-3 to be accepted (and to survive revalidation)
+_NOISE_MARGIN = 0.03
 
 _lock = threading.RLock()
 _table: dict[str, dict] | None = None
 
-# tile-name sets per kernel (also the validation contract)
+# tile-name sets per kernel (also the validation contract); "qb" is the
+# xla lane's query sub-block — "no sub-blocking" is stored as qb == bq
 _TILE_NAMES = {
-    "pdist": ("bq", "bp"),
-    "range_filter": ("bq", "bp"),
+    "pdist": ("bq", "bp", "qb"),
+    "range_filter": ("bq", "bp", "qb"),
     "rankeval": ("bg", "bb"),
     "pdist_rankeval": ("bg", "bb"),
 }
@@ -175,17 +186,29 @@ def _candidates(backend: str, kernel: str, metric: str | None,
             if metric in (None, "sql2"):
                 bqs = {128, nq}
                 bps = {128, 1024, 8192, npts}
+                qbs = {16, 32, 0}        # 0 -> qb = bq (no sub-blocking)
             else:  # broadcast (bq, bp, d) intermediate — bound it
                 bqs = {32, 128}
                 bps = {128, 512, 2048}
-        else:  # pallas lanes: bp rides the 128-lane axis
+                qbs = {8, 0}
+        else:  # pallas lanes: bp rides the 128-lane axis; the grid is
+            # point-major so qb sub-blocking adds nothing — pin qb = bq
             bqs = {128, 256}
             bps = {128, 256, 512, 1024}
-        cands = [{"bq": min(_round8(bq), nq), "bp": min(_round8(bp), npts)}
-                 for bq in bqs for bp in bps]
+            qbs = {0}
+        cands = []
+        for bq in bqs:
+            for bp in bps:
+                bqf = min(_round8(bq), nq)
+                bpf = min(_round8(bp), npts)
+                for qb in qbs:
+                    # bucket dims are powers of two (floor 8), so a
+                    # clamped qb always divides bq
+                    qbf = bqf if qb == 0 else min(_round8(qb), bqf)
+                    cands.append({"bq": bqf, "bp": bpf, "qb": qbf})
         if metric in ("l1", "linf"):
             cands = [c for c in cands
-                     if c["bq"] * c["bp"] * d * 4 <= 512 * 2 ** 20]
+                     if c["qb"] * c["bp"] * d * 4 <= 512 * 2 ** 20]
     elif kernel in ("rankeval", "pdist_rankeval"):
         g, b = bd["g"], bd["b"]
         if backend == "xla-cpu":
@@ -224,10 +247,12 @@ def _bench_thunk(kernel: str, metric: str | None, bd: dict[str, int],
         p = rng.standard_normal((bd["p"], bd["d"])).astype(np.float32)
         if kernel == "pdist":
             return lambda: ops.pdist(q, p, metric or "sql2",
-                                     bq=tiles["bq"], bp=tiles["bp"])
+                                     bq=tiles["bq"], bp=tiles["bp"],
+                                     qb=tiles.get("qb"))
         r = np.full((bd["q"],), 1.0, np.float32)
         return lambda: ops.range_filter(q, p, r, bq=tiles["bq"],
-                                        bp=tiles["bp"])
+                                        bp=tiles["bp"],
+                                        qb=tiles.get("qb"))
     if kernel == "rankeval":
         x = rng.standard_normal((bd["g"], bd["b"])).astype(np.float32)
         coef = rng.standard_normal((bd["g"], bd["c"])).astype(np.float32)
@@ -260,13 +285,43 @@ def _time_us(thunk, reps: int = 3) -> float:
     return best * 1e6
 
 
+def _paired_us(thunk_a, thunk_b, reps: int = 3) -> tuple[float, float]:
+    """Interleaved best-of-``reps`` timing of two compiled thunks
+    (A/B/A/B/…) so machine-load drift hits both measurements equally —
+    the comparison the acceptance margin is applied to."""
+    import jax
+    jax.block_until_ready(thunk_a())      # compile + warm both first
+    jax.block_until_ready(thunk_b())
+    best_a = best_b = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(thunk_a())
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(thunk_b())
+        best_b = min(best_b, time.perf_counter() - t0)
+    return best_a * 1e6, best_b * 1e6
+
+
+def _static_tiles(kernel: str, metric: str | None,
+                  bd: dict[str, int]) -> dict[str, int]:
+    from . import ops  # deferred: ops imports this module
+    return ops.static_tiles(kernel, metric, bd)
+
+
 def tune(kernel: str, metric: str | None, dims: dict[str, int],
          verbose: bool = False) -> dict:
     """Search the candidate grid for this shape bucket, persist and
-    return the winning entry."""
+    return the winning entry.
+
+    The grid winner is accepted only when a *paired* best-of-3 against
+    the static heuristic shows it faster by more than ``_NOISE_MARGIN``
+    — otherwise the static tiles are cached (with their measured time),
+    so a noisy micro-run can never pin a regression into the table."""
     backend = dispatch.backend_key()
     bd = {k: bucket(v) for k, v in dims.items()}
     key = _key(backend, kernel, metric, bd)
+    static = _static_tiles(kernel, metric, bd)
     best_tiles, best_us = None, float("inf")
     for tiles in _candidates(backend, kernel, metric, bd):
         us = _time_us(_bench_thunk(kernel, metric, bd, tiles))
@@ -274,12 +329,71 @@ def tune(kernel: str, metric: str | None, dims: dict[str, int],
             print(f"  {key} {tiles} -> {us:.0f}us")
         if us < best_us:
             best_tiles, best_us = tiles, us
+    static_us = best_us
+    if best_tiles != static:
+        best_us, static_us = _paired_us(
+            _bench_thunk(kernel, metric, bd, best_tiles),
+            _bench_thunk(kernel, metric, bd, static))
+        if best_us >= static_us * (1.0 - _NOISE_MARGIN):
+            best_tiles, best_us = dict(static), static_us
+            if verbose:
+                print(f"  {key} grid winner within noise of static "
+                      f"-> keeping static {static}")
     ent = {"tiles": best_tiles, "us": round(best_us, 1),
-           "v": SCHEMA_VERSION}
+           "static_us": round(static_us, 1), "v": SCHEMA_VERSION}
     with _lock:
         _entries()[key] = ent
         _write_user_cache(key, ent)
     return ent
+
+
+def _parse_key(key: str):
+    """(backend, kernel, metric, bucket-dims) from a table key, or None
+    when malformed."""
+    parts = key.split("/")
+    if len(parts) < 4:
+        return None
+    backend, kernel, metric = parts[0], parts[1], parts[2]
+    try:
+        dims = {k: int(v) for k, v in (s.split("=") for s in parts[3:])}
+    except ValueError:
+        return None
+    return backend, kernel, None if metric == "-" else metric, dims
+
+
+def revalidate(verbose: bool = False) -> dict:
+    """Re-measure every cached entry for the current backend.
+
+    Entries whose tiles no longer beat the static heuristic by the
+    noise margin (stale after kernel changes or a machine move) are
+    re-tuned from scratch; still-winning entries get their timings
+    refreshed.  Returns {key: entry} for every entry touched."""
+    backend = dispatch.backend_key()
+    out = {}
+    for key, ent in sorted(_entries().items()):
+        parsed = _parse_key(key)
+        if parsed is None or parsed[0] != backend:
+            continue
+        _, kernel, metric, bd = parsed
+        static = _static_tiles(kernel, metric, bd)
+        if ent["tiles"] == static:
+            continue                      # static entries can't go stale
+        tuned_us, static_us = _paired_us(
+            _bench_thunk(kernel, metric, bd, ent["tiles"]),
+            _bench_thunk(kernel, metric, bd, static))
+        if tuned_us >= static_us * (1.0 - _NOISE_MARGIN):
+            if verbose:
+                print(f"  {key}: stale ({tuned_us:.0f}us vs static "
+                      f"{static_us:.0f}us) -> retuning")
+            out[key] = tune(kernel, metric, bd, verbose=verbose)
+        else:
+            new = {"tiles": dict(ent["tiles"]), "us": round(tuned_us, 1),
+                   "static_us": round(static_us, 1), "v": SCHEMA_VERSION}
+            with _lock:
+                _entries()[key] = new
+                _write_user_cache(key, new)
+            out[key] = new
+    return out
 
 
 def _write_user_cache(key: str, ent: dict) -> None:
@@ -304,12 +418,19 @@ def _write_user_cache(key: str, ent: dict) -> None:
 
 # ------------------------------------------------------------------ warm
 
-# the pipeline's standard shape buckets: (kernel, metric, dims)
+# the pipeline's standard shape buckets: (kernel, metric, dims) — the
+# bench_kernels shapes plus the serving/roofline refinement bucket
+# (batch 64 queries × ~100k padded slots × d=8, the shape the resident
+# executor's range/knn filters actually launch at)
 _WARM_FULL = (
     ("pdist", "sql2", {"q": 256, "p": 65536, "d": 32}),
     ("range_filter", "sql2", {"q": 256, "p": 65536, "d": 32}),
+    ("pdist", "sql2", {"q": 64, "p": 92544, "d": 8}),
+    ("range_filter", "sql2", {"q": 64, "p": 92544, "d": 8}),
     ("rankeval", None, {"g": 64, "b": 4096, "c": 16}),
+    ("rankeval", None, {"g": 48, "b": 128, "c": 21}),
     ("pdist_rankeval", None, {"g": 64, "b": 256, "d": 32, "c": 16}),
+    ("pdist_rankeval", None, {"g": 48, "b": 64, "d": 8, "c": 21}),
 )
 _WARM_QUICK = (
     ("pdist", "sql2", {"q": 128, "p": 4096, "d": 16}),
@@ -341,14 +462,20 @@ def main(argv=None) -> int:  # pragma: no cover - thin CLI
                     help="tune the standard pipeline shape buckets")
     ap.add_argument("--quick", action="store_true",
                     help="small shapes (CI smoke)")
+    ap.add_argument("--revalidate", action="store_true",
+                    help="re-measure cached entries; retune stale ones "
+                         "whose win over the static heuristic is gone")
     args = ap.parse_args(argv)
-    if not args.warm:
+    if not (args.warm or args.revalidate):
         ap.print_help()
         return 2
-    res = warm(quick=args.quick, verbose=True)
+    res = warm(quick=args.quick, verbose=True) if args.warm else {}
+    if args.revalidate:
+        res.update(revalidate(verbose=True))
     print(f"tuned {len(res)} entries -> {cache_path()}")
     for key, ent in res.items():
-        print(f"  {key}: {ent['tiles']} ({ent['us']:.0f}us)")
+        print(f"  {key}: {ent['tiles']} ({ent['us']:.0f}us, "
+              f"static {ent.get('static_us', ent['us']):.0f}us)")
     return 0
 
 

@@ -75,10 +75,26 @@ def default_interpret() -> bool:
     return kernel_mode() == "interpret"
 
 
+def compact_enabled() -> bool:
+    """Whether the resident executor should gather certified candidate
+    rows into a dense bucket before the filter kernels (DESIGN.md §13)
+    instead of streaming the full padded slot array."""
+    return env.get("REPRO_COMPACT") == "on"
+
+
+def rows_dtype() -> str | None:
+    """Requested reduced-precision filter-plane dtype for snapshot rows:
+    ``"bf16"`` | ``"f16"``, or None when the plane is disabled (the
+    default — f32 everywhere, bitwise-identical to prior releases)."""
+    v = env.get("REPRO_ROWS_DTYPE")
+    return None if v in ("off", "f32") else v
+
+
 def resolve_interpret(interpret: bool | None) -> bool:
     """``None`` → backend auto-selection; a bool is respected as-is."""
     return default_interpret() if interpret is None else bool(interpret)
 
 
 __all__ = ["kernel_mode", "backend_key", "fused_plan_enabled",
-           "default_interpret", "resolve_interpret"]
+           "default_interpret", "resolve_interpret", "compact_enabled",
+           "rows_dtype"]

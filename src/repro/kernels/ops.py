@@ -117,17 +117,26 @@ def _pad_rows(x: jax.Array, mult: int, fill: float = 0.0) -> jax.Array:
 
 
 def _qp_tiles(nq: int, npts: int, d: int, metric: str, mode: str,
-              bq: int | None, bp: int | None,
-              kernel: str) -> tuple[int, int]:
-    """Resolve the (bq, bp) pair for a query×points kernel under the
-    current lane: explicit values win, then the tuning table (compiled
-    lanes), then static heuristics."""
+              bq: int | None, bp: int | None, qb: int | None,
+              kernel: str, consult: bool = True) -> tuple[int, int, int]:
+    """Resolve the (bq, bp, qb) triple for a query×points kernel under
+    the current lane: explicit values win, then the tuning table
+    (compiled lanes; ``consult=False`` skips it — the autotuner's own
+    static-baseline resolution), then static heuristics.
+
+    ``qb`` is the query *sub*-block of the xla lane's query-blocked
+    nest (see ``kernels/xla.py``); 0 means no sub-blocking.  It is
+    meaningful only on the xla lane — the pallas grid is point-major,
+    which gives the same point-tile reuse structurally — and must
+    divide ``bq`` (misaligned overrides degrade to 0, never to a bad
+    reshape)."""
     interp = mode == "interpret"
-    if not interp and (bq is None or bp is None):
+    if consult and not interp and (bq is None or bp is None or qb is None):
         t = autotune.tiles_for(kernel, metric, {"q": nq, "p": npts, "d": d})
         if t:
             bq = t["bq"] if bq is None else bq
             bp = t["bp"] if bp is None else bp
+            qb = t.get("qb") if qb is None else qb
     if kernel == "pdist" and metric in ("l1", "linf") and mode != "xla":
         # the pallas kernels cap bq at 32 for the broadcast metrics —
         # cap before padding so unaligned query counts pad to the capped
@@ -138,7 +147,36 @@ def _qp_tiles(nq: int, npts: int, d: int, metric: str, mode: str,
         bp = _point_block(npts, 128 if bp is None else bp, interp)
     else:
         bp = _tile(npts, 128 if bp is None else bp, _mode_lane(mode))
-    return bq, bp
+    if mode != "xla" or qb is None or qb >= min(bq, nq):
+        qb = 0
+    else:
+        qb = _tile(min(bq, nq), qb)
+        if qb <= 0 or min(bq, nq) % qb:
+            qb = 0
+    return bq, bp, qb
+
+
+def static_tiles(kernel: str, metric: str | None,
+                 dims: dict[str, int]) -> dict[str, int]:
+    """Static-heuristic tiles for ``kernel`` at ``dims`` under the
+    current lane — the autotuner's baseline candidate (never consults
+    the tuning table, so tuning can't recurse into a lookup).  ``qb``
+    is reported as ``bq`` ("no sub-blocking") so the dict validates as
+    a table entry."""
+    mode = kernel_mode()
+    interp = mode == "interpret"
+    if kernel in ("pdist", "range_filter"):
+        bq, bp, qb = _qp_tiles(dims["q"], dims["p"], dims["d"],
+                               metric or "sql2", mode, None, None, None,
+                               kernel, consult=False)
+        return {"bq": bq, "bp": bp, "qb": qb or bq}
+    if kernel in ("rankeval", "pdist_rankeval"):
+        g, b = dims["g"], dims["b"]
+        bg = _tile(g, 64 if interp else 8)
+        bb = _point_block(b, 128, interp) if interp \
+            else _tile(b, 128, _mode_lane(mode))
+        return {"bg": bg, "bb": bb}
+    raise ValueError(f"unknown kernel {kernel!r}")
 
 
 def local_blocks(nq: int, npts: int, bq: int | None = None,
@@ -155,24 +193,32 @@ def local_blocks(nq: int, npts: int, bq: int | None = None,
     shard-local sizing for free.  The helper exists for code that needs
     the policy *outside* a kernel call: benchmarks reporting the tile a
     measurement ran with, and tile-alignment property tests.  ``d`` only
-    affects the compiled lanes' tuning-table shape bucket."""
-    return _qp_tiles(nq, npts, d, metric, kernel_mode(), bq, bp, "pdist")
+    affects the compiled lanes' tuning-table shape bucket.  (The xla
+    lane's query sub-block ``qb`` is an internal chunking of ``bq`` and
+    is not part of this pair.)"""
+    tbq, tbp, _ = _qp_tiles(nq, npts, d, metric, kernel_mode(), bq, bp,
+                            None, "pdist")
+    return tbq, tbp
 
 
 def pdist(q, p, metric: str = "sql2", bq: int | None = None,
-          bp: int | None = None):
+          bp: int | None = None, qb: int | None = None):
     """Pairwise distances with automatic padding. metric: sql2 | l1 | linf.
-    sql2 returns squared distances (use ``jnp.sqrt`` or square radii)."""
+    sql2 returns squared distances (use ``jnp.sqrt`` or square radii).
+    ``qb`` is the xla lane's query sub-block (``None`` → policy; ignored
+    on the pallas/interpret lanes, whose point-major grid already reuses
+    point tiles)."""
     q = jnp.asarray(q)
     p = jnp.asarray(p)
     nq, npts = q.shape[0], p.shape[0]
     mode = kernel_mode()
     _count_launch("pdist", mode, q)
-    bq, bp = _qp_tiles(nq, npts, q.shape[1], metric, mode, bq, bp, "pdist")
+    bq, bp, qb = _qp_tiles(nq, npts, q.shape[1], metric, mode, bq, bp,
+                           qb, "pdist")
     qp = _pad_rows(q, bq)
     pp = _pad_rows(p, bp)
     if mode == "xla":
-        out = pdist_xla(qp, pp, metric=metric, bq=bq, bp=bp)
+        out = pdist_xla(qp, pp, metric=metric, bq=bq, bp=bp, qb=qb)
     else:
         out = pdist_pallas(qp, pp, metric=metric, bq=bq, bp=bp,
                            interpret=mode == "interpret")
@@ -222,21 +268,23 @@ def rankeval(x, coef, lo, hi, n, n_rings: int = 20,
     return rank[:g, :b], rid[:g, :b]
 
 
-def range_filter(q, p, r, bq: int | None = None, bp: int | None = None):
-    """Fused L2-ball membership mask for batched range queries."""
+def range_filter(q, p, r, bq: int | None = None, bp: int | None = None,
+                 qb: int | None = None):
+    """Fused L2-ball membership mask for batched range queries.
+    ``qb`` as in :func:`pdist`."""
     q = jnp.asarray(q)
     p = jnp.asarray(p)
     r = jnp.asarray(r, jnp.float32)
     nq, npts = q.shape[0], p.shape[0]
     mode = kernel_mode()
     _count_launch("range_filter", mode, q)
-    bq, bp = _qp_tiles(nq, npts, q.shape[1], "sql2", mode, bq, bp,
-                       "range_filter")
+    bq, bp, qb = _qp_tiles(nq, npts, q.shape[1], "sql2", mode, bq, bp,
+                           qb, "range_filter")
     qp = _pad_rows(q, bq)
     pp = _pad_rows(p, bp, fill=np.inf)     # padding rows never match
     rp = _pad_rows(r, bq, fill=-1.0)
     if mode == "xla":
-        mask, cnt = range_filter_xla(qp, pp, rp, bq=bq, bp=bp)
+        mask, cnt = range_filter_xla(qp, pp, rp, bq=bq, bp=bp, qb=qb)
     else:
         mask, cnt = range_filter_pallas(qp, pp, rp, bq=bq, bp=bp,
                                         interpret=mode == "interpret")
@@ -315,5 +363,5 @@ def flash_attention(q, k, v, causal: bool = True, bq: int = 128,
 
 
 __all__ = ["pdist", "rankeval", "range_filter", "pdist_rankeval",
-           "flash_attention", "pad_to", "local_blocks",
+           "flash_attention", "pad_to", "local_blocks", "static_tiles",
            "fused_plan_enabled"]

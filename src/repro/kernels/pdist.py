@@ -61,6 +61,14 @@ def pdist_pallas(q: jax.Array, p: jax.Array, metric: str = "sql2",
     paying an elementwise sqrt over the nq×np tile). nq/np must be multiples
     of bq/bp — ``repro.kernels.ops`` handles padding. ``interpret=None``
     auto-selects by backend (compiled on TPU/GPU, interpreted on CPU).
+
+    The grid is point-major (point tiles outer, query tiles inner — the
+    last grid dimension iterates fastest): each candidate-point tile is
+    fetched into VMEM once and reused across every query tile, instead
+    of the whole point array being re-streamed per query tile.  The
+    point plane dominates the operand bytes on the refinement path, so
+    this is the bandwidth-friendly orientation; per-cell outputs are
+    unchanged, so results are bit-identical to the query-major grid.
     """
     interpret = resolve_interpret(interpret)
     nq, d = q.shape
@@ -73,12 +81,12 @@ def pdist_pallas(q: jax.Array, p: jax.Array, metric: str = "sql2",
         assert nq % bq == 0
     return pl.pallas_call(
         _KERNELS[metric],
-        grid=(nq // bq, npts // bp),
+        grid=(npts // bp, nq // bq),
         in_specs=[
-            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((bp, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bq, d), lambda j, i: (i, 0)),
+            pl.BlockSpec((bp, d), lambda j, i: (j, 0)),
         ],
-        out_specs=pl.BlockSpec((bq, bp), lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec((bq, bp), lambda j, i: (i, j)),
         out_shape=jax.ShapeDtypeStruct((nq, npts), jnp.float32),
         interpret=interpret,
     )(q, p)

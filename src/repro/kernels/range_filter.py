@@ -41,6 +41,10 @@ def range_filter_pallas(q: jax.Array, p: jax.Array, r: jax.Array,
     queries in one launch. Counts are per (query, point-tile): the host
     uses them to skip empty tiles when gathering results. ``interpret=None``
     auto-selects by backend (compiled on TPU/GPU, interpreted on CPU).
+
+    Point-major grid (query tiles iterate fastest), same as
+    ``pdist_pallas``: each candidate tile is fetched once and reused
+    across the query tiles; per-cell outputs are unchanged.
     """
     interpret = resolve_interpret(interpret)
     nq, d = q.shape
@@ -49,15 +53,15 @@ def range_filter_pallas(q: jax.Array, p: jax.Array, r: jax.Array,
     r2 = (r * r).astype(jnp.float32)
     return pl.pallas_call(
         _range_filter_kernel,
-        grid=(nq // bq, npts // bp),
+        grid=(npts // bp, nq // bq),
         in_specs=[
-            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((bp, d), lambda i, j: (j, 0)),
-            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bq, d), lambda j, i: (i, 0)),
+            pl.BlockSpec((bp, d), lambda j, i: (j, 0)),
+            pl.BlockSpec((bq,), lambda j, i: (i,)),
         ],
         out_specs=[
-            pl.BlockSpec((bq, bp), lambda i, j: (i, j)),
-            pl.BlockSpec((bq, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((bq, bp), lambda j, i: (i, j)),
+            pl.BlockSpec((bq, 1), lambda j, i: (i, j)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((nq, npts), jnp.uint8),

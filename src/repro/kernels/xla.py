@@ -13,12 +13,22 @@ lanes results agree to f32 tolerance (accumulation order in the dot may
 differ).
 
 Tile sizes here are real tuning parameters, not grid geometry: a
-``(bq, bp)`` / ``(bg, bb)`` pair becomes ``lax.map`` chunk sizes —
+``(bq, bp, qb)`` / ``(bg, bb)`` tuple becomes ``lax.map`` chunk sizes —
 cache blocking — which is exactly what the autotuner searches per shape
 bucket.  A chunk size >= the operand dimension means "no chunking": one
 fused XLA computation over the whole operand (for the sql2 Gram path
 that is usually the winner; for the broadcast l1/linf path chunking is
 mandatory to bound the (bq, bp, d) intermediate).
+
+Query blocking: the query×points kernels take a third chunk size ``qb``
+(query *sub*-block).  The loop nest is query super-tiles (``bq``) →
+point blocks (``bp``) → query sub-blocks (``qb``): each point block is
+loaded once per super-tile and stays cache-resident while the ``qb``-row
+sub-blocks stream over it, instead of the whole point array being
+re-streamed per query tile.  ``qb >= bq`` (or 0) disables sub-blocking.
+Every output cell is produced by the same per-pair arithmetic regardless
+of the (bq, bp, qb) choice, so results are bit-identical across tilings
+(pinned in tests) — tiles move bytes, not math.
 
 Operands arrive padded to tile multiples (``ops.py`` does the padding,
 same as for the pallas lane), so every ``reshape(n // b, b, ...)`` here
@@ -67,19 +77,36 @@ def _map_pblocks(fn, p: jax.Array, bp: int):
     return jnp.swapaxes(out, 0, 1).reshape(out.shape[1], npts)
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "bq", "bp"))
+def _map_qsub(fn, qs: jax.Array, qb: int):
+    """Map ``fn`` over ``qb``-row sub-blocks of a query super-tile and
+    re-join on the row axis: (nS, qb, cols) → (nS*qb, cols).  The point
+    operand is closed over — loaded once, reused across sub-blocks."""
+    gsz, d = qs.shape
+    if qb <= 0 or qb >= gsz:
+        return fn(qs)
+    out = jax.lax.map(fn, qs.reshape(gsz // qb, qb, d))
+    return out.reshape(gsz, out.shape[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "bq", "bp", "qb"))
 def pdist_xla(q: jax.Array, p: jax.Array, metric: str = "sql2",
-              bq: int = 128, bp: int = 128) -> jax.Array:
-    """(nq, npts) f32 distance matrix; nq % bq == 0, npts % bp == 0."""
+              bq: int = 128, bp: int = 128, qb: int = 0) -> jax.Array:
+    """(nq, npts) f32 distance matrix; nq % bq == 0, npts % bp == 0,
+    bq % qb == 0 when query sub-blocking is on (qb in (0, bq))."""
     q = q.astype(jnp.float32)
     p = p.astype(jnp.float32)
     nq, d = q.shape
     npts = p.shape[0]
+    if 0 < qb < min(bq, nq):
+        assert min(bq, nq) % qb == 0, (nq, bq, qb)
 
-    def qblock(qb):
+    def qblock(qs):
+        def pblock(pb):
+            return _map_qsub(lambda qsub: _pdist_block(qsub, pb, metric),
+                             qs, qb)
         if bp >= npts:
-            return _pdist_block(qb, p, metric)
-        return _map_pblocks(lambda pb: _pdist_block(qb, pb, metric), p, bp)
+            return pblock(p)
+        return _map_pblocks(pblock, p, bp)
 
     if bq >= nq:
         return qblock(q)
@@ -119,30 +146,42 @@ def rankeval_xla(x: jax.Array, coef: jax.Array, lo: jax.Array,
     return rk.reshape(g, b), rid.reshape(g, b)
 
 
-@functools.partial(jax.jit, static_argnames=("bq", "bp"))
+@functools.partial(jax.jit, static_argnames=("bq", "bp", "qb"))
 def range_filter_xla(q: jax.Array, p: jax.Array, r: jax.Array,
-                     bq: int = 128, bp: int = 128):
+                     bq: int = 128, bp: int = 128, qb: int = 0):
     """Fused sql2 distance + threshold: (mask (nq, npts) uint8,
     cnt (nq, npts//bp) int32) — same contract as the pallas kernel
-    (``r`` is the per-query radius, squared here)."""
+    (``r`` is the per-query radius, squared here).  Same query-blocked
+    nest as :func:`pdist_xla`: each point block is loaded once per query
+    super-tile and reused across the ``qb``-row sub-blocks."""
     q = q.astype(jnp.float32)
     p = p.astype(jnp.float32)
     r2 = (r * r).astype(jnp.float32)
     nq, d = q.shape
     npts = p.shape[0]
+    if 0 < qb < min(bq, nq):
+        assert min(bq, nq) % qb == 0, (nq, bq, qb)
 
     def qblock(args):
-        qb, r2b = args
+        qs, r2s = args
+        gsz = qs.shape[0]
 
         def pblock(pb):
-            hit = _gram_sq(qb, pb) <= r2b[:, None]
-            return (hit.astype(jnp.uint8),
-                    jnp.sum(hit, axis=1, keepdims=True).astype(jnp.int32))
+            def sub(a):
+                qsub, r2sub = a
+                hit = _gram_sq(qsub, pb) <= r2sub[:, None]
+                return (hit.astype(jnp.uint8),
+                        jnp.sum(hit, axis=1,
+                                keepdims=True).astype(jnp.int32))
+            if qb <= 0 or qb >= gsz:
+                return sub((qs, r2s))
+            m, c = jax.lax.map(sub, (qs.reshape(gsz // qb, qb, d),
+                                     r2s.reshape(gsz // qb, qb)))
+            return m.reshape(gsz, pb.shape[0]), c.reshape(gsz, 1)
 
         if bp >= npts:
             return pblock(p)
         m, c = jax.lax.map(pblock, p.reshape(npts // bp, bp, d))
-        gsz = qb.shape[0]
         return (jnp.swapaxes(m, 0, 1).reshape(gsz, npts),
                 jnp.swapaxes(c, 0, 1).reshape(gsz, -1))
 
@@ -167,35 +206,48 @@ def pdist_rankeval_xla(q: jax.Array, piv: jax.Array, coef: jax.Array,
     ``(dq (B, G) f32, rank_lo (G, B) i32, rank_hi (G, B) i32)`` where
     rank_lo/hi evaluate at dq∓rg — exactly the staged planner's
     ``rankeval(concat(dq-rg, dq+rg))`` split back into halves.  ``bb``
-    is accepted for tuning-interface uniformity; XLA fuses the
-    elementwise tail, so only ``bg`` (pivot-group chunking of the Gram
-    matmul) is load-bearing here.
+    chunks the query (B) axis: the pivot plane and model params are
+    loaded once per query chunk and reused, bounding the live
+    (bb, bg) distance/rank tiles — the same query-blocked nest as
+    :func:`pdist_xla`.
     """
-    del bb
     q = q.astype(jnp.float32)
-    B = q.shape[0]
+    B, d = q.shape
     g = piv.shape[0]
     n_coef = coef.shape[1]
     rg = rg.astype(jnp.float32)
+    gargs = (piv.astype(jnp.float32), coef, lo, hi, n)
 
-    def gblock(args):
-        pg, cg, log, hig, ng = args
-        dq = jnp.sqrt(_gram_sq(q, pg))              # (B, bg)
-        xlo = dq.T - rg[None, :]                    # (bg, B)
-        xhi = dq.T + rg[None, :]
-        rk_lo, _ = rank_math(xlo, cg, log, hig, ng, n_coef=n_coef,
-                             n_rings=n_rings)
-        rk_hi, _ = rank_math(xhi, cg, log, hig, ng, n_coef=n_coef,
-                             n_rings=n_rings)
-        return dq, rk_lo, rk_hi
+    def bchunk(qargs):
+        qc, rgc = qargs                             # (bb, d), (bb,)
 
-    args = (piv.astype(jnp.float32), coef, lo, hi, n)
-    if bg >= g:
-        return gblock(args)
-    chunked = tuple(a.reshape(g // bg, bg, *a.shape[1:]) for a in args)
-    dq, rk_lo, rk_hi = jax.lax.map(gblock, chunked)
-    return (jnp.swapaxes(dq, 0, 1).reshape(B, g),
-            rk_lo.reshape(g, B), rk_hi.reshape(g, B))
+        def gblock(args):
+            pg, cg, log, hig, ng = args
+            dq = jnp.sqrt(_gram_sq(qc, pg))         # (bb, bg)
+            xlo = dq.T - rgc[None, :]               # (bg, bb)
+            xhi = dq.T + rgc[None, :]
+            rk_lo, _ = rank_math(xlo, cg, log, hig, ng, n_coef=n_coef,
+                                 n_rings=n_rings)
+            rk_hi, _ = rank_math(xhi, cg, log, hig, ng, n_coef=n_coef,
+                                 n_rings=n_rings)
+            return dq, rk_lo, rk_hi
+
+        if bg >= g:
+            return gblock(gargs)
+        chunked = tuple(a.reshape(g // bg, bg, *a.shape[1:])
+                        for a in gargs)
+        dq, rk_lo, rk_hi = jax.lax.map(gblock, chunked)
+        bc = qc.shape[0]
+        return (jnp.swapaxes(dq, 0, 1).reshape(bc, g),
+                rk_lo.reshape(g, bc), rk_hi.reshape(g, bc))
+
+    if bb >= B:
+        return bchunk((q, rg))
+    dq, rk_lo, rk_hi = jax.lax.map(
+        bchunk, (q.reshape(B // bb, bb, d), rg.reshape(B // bb, bb)))
+    return (dq.reshape(B, g),
+            jnp.swapaxes(rk_lo, 0, 1).reshape(g, B),
+            jnp.swapaxes(rk_hi, 0, 1).reshape(g, B))
 
 
 __all__ = ["pdist_xla", "rankeval_xla", "range_filter_xla",

@@ -77,17 +77,14 @@ class ServingEngine:
         # when "async" (None defers to REPRO_PREFETCH; DESIGN.md §8)
         self._prefetch = prefetch
         self._refresh_every = int(refresh_every)
-        # online retrains route through the device builder (repro.build;
-        # DESIGN.md §6) whenever the kernels compile — on real
-        # accelerators partial reconstruction stops being the refresh
-        # bottleneck.  CPU runs interpret-mode kernels, where the device
-        # path only costs (retrains hold the update lock), so the
-        # default resolves by dispatch policy; pass "device"/"host" to
-        # pin it.
-        if build_backend is None:
-            from ..kernels.dispatch import default_interpret
-            build_backend = "host" if default_interpret() else "device"
-        self._build_backend = build_backend
+        # online retrains default to "auto": the index routes each
+        # retrain host-vs-device on the cluster's member row count (the
+        # measured crossover, core.index.RETRAIN_AUTO_ROWS) — small
+        # clusters skip device dispatch overhead, big ones use the
+        # accelerator, and the interpret lane / custom metrics always
+        # rebuild on host.  Pass "device"/"host" to pin it.
+        self._build_backend = "auto" if build_backend is None \
+            else build_backend
         self._sharded = sharded
         self._mesh = mesh
         self._async = bool(async_refresh)

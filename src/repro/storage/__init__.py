@@ -27,8 +27,8 @@ from .cache import (DEFAULT_CACHE_PAGES, CacheStats, LRUPageCache,
                     cache_pin_mode)
 from .layout import DEFAULT_PAGE_BYTES, PageLayout, rows_per_page
 from .manifest import Manifest, write_atomic
-from .prefetch import (PagePrefetcher, PrefetchTicket, prefetch_mode,
-                       shutdown_prefetch)
+from .prefetch import (PagePrefetcher, PrefetchTicket, drain_queue,
+                       prefetch_mode, shutdown_prefetch)
 from .scheduler import IOPlan, page_runs, plan_batch
 from .store import PagedStore, StoreView, load_meta, spill_rows
 
@@ -43,7 +43,7 @@ __all__ = [
     "CacheStats", "DEFAULT_CACHE_PAGES", "DEFAULT_PAGE_BYTES", "IOPlan",
     "LRUPageCache", "Manifest", "PageLayout", "PagePrefetcher",
     "PagedStore", "PrefetchTicket", "StoreView", "cache_pin_mode",
-    "load_meta", "page_runs", "plan_batch", "prefetch_mode",
+    "drain_queue", "load_meta", "page_runs", "plan_batch", "prefetch_mode",
     "rows_per_page", "shutdown_prefetch", "spill_rows", "storage_mode",
     "write_atomic",
 ]

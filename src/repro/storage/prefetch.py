@@ -82,6 +82,7 @@ _WORKER_LOCK = threading.Lock()
 _WORKER: threading.Thread | None = None
 _SHUTDOWN = threading.Event()
 _SENTINEL = object()
+_EMPTY_PAGES = np.empty(0, np.int64)    # shared drain-marker payload
 
 
 def _drop(prefetcher, pages) -> None:
@@ -147,6 +148,23 @@ def shutdown_prefetch(timeout: float = 2.0) -> bool:
         if stopped:
             _WORKER = None
         return stopped
+
+
+def drain_queue(timeout: float | None = None) -> bool:
+    """Block until every plan queued so far (from any prefetcher) has
+    been processed.  The shared worker touches stores — and therefore
+    the obs gauges — from its own thread, so anything measuring
+    allocation or metric quiescence must drain first.  Returns False on
+    timeout; True when the queue was empty or became empty (including
+    after shutdown, when nothing can be in flight)."""
+    if _SHUTDOWN.is_set():
+        return True
+    with _WORKER_LOCK:
+        if _WORKER is None or not _WORKER.is_alive():
+            return True
+    ev = threading.Event()
+    _QUEUE.put((None, _EMPTY_PAGES, ev))
+    return ev.wait(timeout)
 
 
 def _restart_for_tests() -> None:
@@ -259,5 +277,5 @@ class PagePrefetcher:
             }
 
 
-__all__ = ["PagePrefetcher", "PrefetchTicket", "prefetch_mode",
-           "shutdown_prefetch"]
+__all__ = ["PagePrefetcher", "PrefetchTicket", "drain_queue",
+           "prefetch_mode", "shutdown_prefetch"]

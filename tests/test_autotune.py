@@ -116,7 +116,7 @@ def test_local_blocks_divide_padded_operands(nq, npts, bq, bp, metric):
 def test_tiles_for_returns_validated_tiles(tune_cache, monkeypatch):
     monkeypatch.setenv("REPRO_AUTOTUNE", "force")
     t = autotune.tiles_for("pdist", "sql2", _TINY)
-    assert set(t) == {"bq", "bp"}
+    assert set(t) == {"bq", "bp", "qb"}
     assert all(isinstance(v, int) and v > 0 and v % 8 == 0
                for v in t.values())
     # the entry landed in the JSON file too
@@ -147,13 +147,15 @@ def test_corrupted_cache_rejected_then_retuned(tune_cache, monkeypatch):
     backend = "xla-cpu"
     bd = {k: autotune.bucket(v) for k, v in _TINY.items()}
     key = autotune._key(backend, "pdist", "sql2", bd)
+    v = autotune.SCHEMA_VERSION
     corrupt = {
-        key: {"tiles": {"bq": 12, "bp": 64}, "us": 1.0, "v": 1},  # 12 % 8
-        key + "x": {"tiles": {"bq": 8}, "us": 1.0, "v": 1},       # names
+        key: {"tiles": {"bq": 12, "bp": 64, "qb": 8}, "us": 1.0, "v": v},
+        key + "x": {"tiles": {"bq": 8}, "us": 1.0, "v": v},       # names
         autotune._key(backend, "rankeval", None, {"g": 8, "b": 8, "c": 8}):
-            {"tiles": {"bg": 8, "bb": "all"}, "us": 1.0, "v": 1},  # type
+            {"tiles": {"bg": 8, "bb": "all"}, "us": 1.0, "v": v},  # type
         autotune._key(backend, "range_filter", "sql2", bd):
-            {"tiles": {"bq": 8, "bp": 8}, "us": 1.0, "v": 99},     # version
+            {"tiles": {"bq": 8, "bp": 8, "qb": 8}, "us": 1.0,
+             "v": 1},   # stale schema version (pre-qb)
     }
     tune_cache.write_text(json.dumps(
         {"version": autotune.SCHEMA_VERSION, "entries": corrupt}))

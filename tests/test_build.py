@@ -165,17 +165,20 @@ def test_serving_engine_routes_retrain_through_device_builder():
     default wherever the kernels compile; pinned here for the
     CPU-interpret CI); retrain + refresh must fold buffers/tombstones
     exactly, matching the host index it mirrors."""
-    from repro.kernels.dispatch import default_interpret
     rng = np.random.default_rng(0)
     X = gauss_mix(900, D, seed=5)
     ix = LIMSIndex(MetricSpace(X, "l2"), n_clusters=4, m=3, n_rings=8)
     se = ServingEngine(ix, refresh_every=0,        # manual refresh only
                        build_backend="device")
     assert se._build_backend == "device"
-    # the default resolves by dispatch policy: host loop on interpret
-    # backends (retrains hold the update lock), device when compiled
-    expected = "host" if default_interpret() else "device"
-    assert ServingEngine(ix, refresh_every=0)._build_backend == expected
+    # the default is the measured-crossover router: host for small
+    # clusters, device past RETRAIN_AUTO_ROWS on compiled vector lanes
+    se_auto = ServingEngine(ix, refresh_every=0)
+    assert se_auto._build_backend == "auto"
+    se_auto.retrain_cluster(0)
+    # these clusters sit far below the RETRAIN_AUTO_ROWS crossover (and
+    # interpret lanes route host regardless), so auto must pick host
+    assert ix.last_retrain_backend == "host"
     new_rows = X[rng.choice(900, 12)] + rng.normal(0, 0.02, (12, D))
     gids = [se.insert(r) for r in new_rows]
     assert se.delete(X[7]) == 1
